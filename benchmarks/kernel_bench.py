@@ -1,0 +1,55 @@
+"""Pallas kernel micro-bench (interpret mode on CPU).
+
+The us_per_call numbers are CPU-interpreter wall times — NOT TPU
+performance (this container has no TPU). The derived column carries the
+structural facts that do transfer: VMEM tile bytes per grid step and
+arithmetic intensity, which determine the TPU roofline position.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit, time_fn
+
+RNG = np.random.default_rng(0)
+
+
+def run():
+    # simt_alu: 16 SMs x 512 threads
+    a = jnp.asarray(RNG.integers(0, 2**31, (16, 512), dtype=np.uint32))
+    ones = jnp.ones((16, 512), jnp.uint32)
+    t = time_fn(lambda: ops.alu(1, 2, a, a, ones, a).block_until_ready())
+    emit("kernel_simt_alu", t,
+         "tile=(8,512)u32x5=80KiB_VMEM elems=8192 fp32_exact=yes")
+
+    af = jnp.asarray(RNG.standard_normal((16, 512)), jnp.float32)
+    t = time_fn(lambda: ops.dot(af, af).block_until_ready())
+    emit("kernel_wavefront_dot", t,
+         "tile=(8,512)f32x3 reduce=16lanes flops_per_instr=31")
+
+    A = jnp.asarray(RNG.standard_normal((64, 16, 16)), jnp.float32)
+    t = time_fn(lambda: ops.qrd(A)[0].block_until_ready())
+    flops = 64 * (4 * 16 ** 3)  # ~4n^3 for MGS
+    emit("kernel_mgs_qrd", t,
+         f"batch=64x16x16 tile=(32,16,16)=32KiB flops~{flops} "
+         f"vmem_resident_factorization=yes")
+
+    re = jnp.asarray(RNG.standard_normal((16, 256)), jnp.float32)
+    im = jnp.zeros((16, 256), jnp.float32)
+    t = time_fn(lambda: ops.fft(re, im)[0].block_until_ready())
+    emit("kernel_fft_r2", t,
+         "batch=16x256 passes=8_in_VMEM hbm_traffic_between_passes=0B")
+
+    q = jnp.asarray(RNG.standard_normal((4, 256, 64)), jnp.float32)
+    t = time_fn(lambda: ops.flash(q, q, q, blk_q=64, blk_k=64)
+                .block_until_ready())
+    emit("kernel_flash_attention", t,
+         "bh=4 s=256 d=64 online_softmax s2_tiles_in_VMEM_only=yes "
+         "(deploys the SPerf cell-C blocking win)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun.jsonl (produced by repro.launch.dryrun)
+and emits one line per (arch x shape) single-pod cell: the three terms,
+the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+RESULTS_OPT = os.path.join(os.path.dirname(__file__), "results",
+                           "dryrun_optimized.jsonl")
+
+
+def load_rows(path: str = RESULTS, mesh: str = "16x16"):
+    if not os.path.exists(path):
+        return []
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("mesh") == mesh:
+                rows[(r["arch"], r["shape"])] = r
+    return [rows[k] for k in sorted(rows)]
+
+
+def run():
+    rows = load_rows()
+    if not rows:
+        emit("roofline", 0.0, "no dryrun.jsonl yet — run "
+             "`python -m repro.launch.dryrun` first")
+        return
+    _emit_rows(rows, "roofline")
+    opt = load_rows(RESULTS_OPT)
+    if opt:
+        _emit_rows(opt, "roofline_optimized")
+
+
+def _emit_rows(rows, prefix):
+    for r in rows:
+        name = f"{prefix}.{r['arch']}.{r['shape']}"
+        if r.get("status") == "skipped":
+            emit(name, 0.0, "SKIPPED full-attention 500k (DESIGN.md)")
+            continue
+        if r.get("status") != "ok":
+            emit(name, 0.0, f"ERROR {r.get('error', '?')[:80]}")
+            continue
+        if "compute_s" not in r:
+            emit(name, 0.0, "compiled ok (multi-pod proof cell)")
+            continue
+        emit(name, r.get("compile_s", 0) * 1e6,
+             f"compute={r['compute_s']:.3g}s memory={r['memory_s']:.3g}s "
+             f"collective={r['collective_s']:.3g}s dominant={r['dominant']} "
+             f"useful={r['useful_flops_ratio']:.2f} "
+             f"roofline_frac={r['roofline_fraction']:.3g} "
+             f"peak_mem={r['peak_bytes_per_device'] / 2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    run()

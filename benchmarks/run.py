@@ -1,0 +1,24 @@
+"""Benchmark harness: one function per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (kernel_bench, roofline_bench, table1_resources,
+                   table3_fft, table4_qrd, table5_resources)
+
+    print("name,us_per_call,derived")
+    table1_resources.run()
+    table3_fft.run()
+    table4_qrd.run()
+    table5_resources.run()
+    kernel_bench.run()
+    roofline_bench.run()
+
+
+if __name__ == "__main__":
+    main()

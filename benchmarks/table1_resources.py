@@ -1,0 +1,30 @@
+"""Paper Table I: resource comparison vs FGPU / FlexGrip.
+
+The eGPU row comes from our analytical model (core/resources.py); the
+derived column checks the paper's headline claims: ~1/10 the ALMs of
+FlexGrip at ~8x the Fmax, 3x FGPU's Fmax.
+"""
+from __future__ import annotations
+
+from repro.core import resources as R
+
+from .common import emit, time_fn
+
+
+def run():
+    t = time_fn(R.table_i)
+    tab = R.table_i()
+    e, fg, fx = tab["eGPU"], tab["FGPU"], tab["FlexGrip"]
+    derived = (f"eGPU={e['alm']}ALM/{e['dsp']}DSP/{e['fmax_mhz']}MHz"
+               f" alm_vs_flexgrip={fx['alm'] / e['alm']:.1f}x"
+               f" fmax_vs_flexgrip={e['fmax_mhz'] / fx['fmax_mhz']:.2f}x"
+               f" fmax_vs_fgpu={e['fmax_mhz'] / fg['fmax_mhz']:.2f}x")
+    emit("table1_resource_comparison", t, derived)
+    for name, row in tab.items():
+        emit(f"table1.{name}", 0.0,
+             f"config={row['config']} alm={row['alm']} dsp={row['dsp']} "
+             f"fmax={row['fmax_mhz']}MHz")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Table III: FFT-256 cycle profile on the eGPU ISS.
+
+Reproduces the paper's instruction-class distribution (theirs: address 12%,
+butterflies 13%, shared-memory access 75%) and the FFT-32 variant, plus
+numerics validation vs numpy and the achieved-GFLOPS derivation from the
+cycle count and modelled Fmax.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import profile, resources
+from repro.core.programs.fft import fft_program, run_fft
+
+from .common import emit, time_fn
+
+
+def _profile_line(n: int):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(n) + 1j * rng.standard_normal(n)).astype(np.complex64)
+    X, st = run_fft(x)
+    err = float(np.max(np.abs(X - np.fft.fft(x))) / np.max(np.abs(np.fft.fft(x))))
+    p = profile(st)
+    b, tot = p["by_class"], p["total_cycles"]
+    shared = (b["LOD_IDX"] + b["STO_IDX"]) / tot
+    addr = (b["LOGIC"] + b["INT"] + b["LOD_IMM"]) / tot
+    fp = (b["FP_ADDSUB"] + b["FP_MUL"]) / tot
+    # flops: N/2 butterflies per pass * log2 N passes * 10 flops each
+    log2n = n.bit_length() - 1
+    flops = (n // 2) * log2n * 10
+    fmax = resources.fmax_mhz(1) * 1e6
+    gflops = flops / (tot / fmax) / 1e9
+    return (f"cycles={tot} rel_err={err:.1e} shared={shared:.0%} "
+            f"addr={addr:.0%} fp={fp:.0%} nop={b['NOP'] / tot:.0%} "
+            f"gflops@771MHz={gflops:.2f} "
+            f"paper(256pt)=75/12/13"), tot
+
+
+def run():
+    for n in (32, 256):
+        t = time_fn(lambda n=n: run_fft(
+            np.ones(n, np.complex64)), warmup=1, iters=1)
+        derived, _ = _profile_line(n)
+        emit(f"table3_fft{n}_profile", t, derived)
+    # program-size claims (paper: 135 instructions for FFT-256)
+    emit("table3_fft256_words", 0.0,
+         f"loop={len(fft_program(256))} "
+         f"unrolled={len(fft_program(256, unroll=True))} paper=135")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Table V: per-block resource report + §III.E sector packing.
+
+Emits the block inventory (verbatim reproduction target) and the derived
+sector-packing arithmetic: 4 SMs/sector, 27 shared-memory M20Ks per eGPU
+(3K words / 12 KiB quad-ported), 16 dot-product DSPs, 4100 ALM budget.
+"""
+from __future__ import annotations
+
+from repro.core import resources as R
+
+from .common import emit, time_fn
+
+
+def run():
+    t = time_fn(R.table_v)
+    for name, row in R.table_v().items():
+        emit(f"table5.{name.replace(' ', '_')}", 0.0,
+             f"alm={row.alms:.0f} regs={row.registers:.0f} "
+             f"dsp={row.dsps} m20k={row.m20ks:.0f}")
+    p = R.pack_sector(4)
+    emit("table5_sector_packing", t,
+         f"sms=4 regfile_m20k={p.regfile_m20ks} sm_dsp={p.dsps_for_sms} "
+         f"shared_m20k_per_egpu={p.shared_copies_per_egpu} "
+         f"shared_words={p.shared_depth_words} shared_kb={p.shared_bytes // 1024} "
+         f"dot_dsp={p.dot_dsps_per_egpu} alm_budget={p.alm_budget_per_egpu}")
+    emit("table5_fmax_model", 0.0,
+         f"single={R.fmax_mhz(1):.0f}MHz soft_logic={R.fmax_mhz(1, use_dsp_fp32=False):.0f}MHz "
+         f"quad={R.fmax_mhz(4):.0f}MHz (paper: 771/831/738)")
+    emit("table5_peak_gflops", 0.0,
+         f"one_sm={R.peak_gflops(1):.1f} quad_sector={R.peak_gflops(4):.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Signal pipeline: windowed FFT spectral analysis on eGPU + Pallas kernel.
+
+    PYTHONPATH=src python examples/fft_pipeline.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import profile, resources
+from repro.core.programs.fft import run_fft
+from repro.kernels import ops
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 256
+    t = np.arange(n) / n
+    # two tones + noise
+    sig = (np.sin(2 * np.pi * 17 * t) + 0.5 * np.sin(2 * np.pi * 49 * t)
+           + 0.05 * rng.standard_normal(n)).astype(np.float32)
+
+    # eGPU ISS path
+    X, st = run_fft(sig.astype(np.complex64))
+    mag = np.abs(X[: n // 2])
+    peaks = np.argsort(mag)[-2:]
+    print("eGPU FFT peak bins:", sorted(peaks), "(expected [17, 49])")
+    p = profile(st)
+    us = p["total_cycles"] / resources.fmax_mhz(1)
+    print(f"eGPU cycles={p['total_cycles']} = {us:.1f}us @771MHz; "
+          f"shared-memory share = "
+          f"{(p['by_class']['LOD_IDX'] + p['by_class']['STO_IDX']) / p['total_cycles']:.0%}"
+          f" (paper: 75%)")
+
+    # Pallas kernel path: batch of 16 windows in VMEM
+    frames = np.stack([sig] * 16)
+    fr, fi = ops.fft(jnp.asarray(frames), jnp.zeros_like(jnp.asarray(frames)))
+    kmag = np.abs(np.asarray(fr)[0, : n // 2] + 1j * np.asarray(fi)[0, : n // 2])
+    print("kernel/ISS spectra agree:",
+          np.allclose(kmag, mag, atol=1e-3 * mag.max()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Batched linear solver via MGS QRD — the paper's motivating workload
+("the linear solvers commonly used in wireless systems", §I).
+
+Solves Ax = b for a batch of 16x16 systems three ways:
+  1. the eGPU ISS running the paper's assembly (semantic reference),
+  2. the Pallas TPU kernel (kernels/mgs_qrd) + triangular back-substitution,
+  3. numpy (oracle),
+and reports agreement + the eGPU cycle cost per solve.
+
+    PYTHONPATH=src python examples/qrd_solver.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import profile
+from repro.core.programs.qrd import run_qrd
+from repro.kernels import ops
+
+
+def back_substitute(r, y):
+    """Solve R x = y for upper-triangular R. r: (B,n,n), y: (B,n)."""
+    B, n, _ = r.shape
+    x = np.zeros((B, n), np.float64)
+    r = np.asarray(r, np.float64)
+    y = np.asarray(y, np.float64)
+    for i in range(n - 1, -1, -1):
+        x[:, i] = (y[:, i] - np.einsum("bj,bj->b", r[:, i, i + 1:],
+                                       x[:, i + 1:])) / r[:, i, i]
+    return x
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, n = 32, 16
+    A = rng.standard_normal((B, n, n)).astype(np.float32)
+    A += 4 * np.eye(n, dtype=np.float32)   # well-conditioned
+    b = rng.standard_normal((B, n)).astype(np.float32)
+
+    # --- Pallas kernel path (batched, TPU-targeted) -------------------------
+    q, r = ops.qrd(jnp.asarray(A))
+    y = np.einsum("bij,bi->bj", np.asarray(q), b)    # Q^T b
+    x_kernel = back_substitute(np.asarray(r), y)
+
+    # --- eGPU ISS path (the paper's machine, one matrix) --------------------
+    q0, r0, st = run_qrd(A[0])
+    y0 = q0.T @ b[0]
+    x_iss = back_substitute(r0[None], y0[None])[0]
+
+    # --- oracle --------------------------------------------------------------
+    x_np = np.stack([np.linalg.solve(A[i], b[i]) for i in range(B)])
+
+    print("kernel max |x - x_np|:", np.abs(x_kernel - x_np).max())
+    print("eGPU ISS max |x - x_np| (matrix 0):",
+          np.abs(x_iss - x_np[0]).max())
+    p = profile(st)
+    cyc = p["total_cycles"]
+    from repro.core import resources
+    us = cyc / (resources.fmax_mhz(1))  # cycles / MHz = microseconds
+    print(f"eGPU QRD: {cyc} cycles = {us:.1f} us at 771 MHz "
+          f"(hard GPUs hit single-digit % efficiency at this size — paper "
+          f"[24,25])")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Quickstart: write eGPU assembly, run it on the ISS, read the profile.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import SMConfig, assemble, check_hazards, profile, run, shmem_f32
+
+# axpy with a wavefront reduction at the end: z = 2x + y; s = sum(z)
+ASM = """
+    TDX R1                   // thread id
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    LOD R2, (R1)+0           // x[tid]
+    LOD R3, (R1)+64          // y[tid]
+    LOD.FP32 R4, #2          // alpha = 2.0
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    MUL.FP32 R5, R2, R4
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    ADD.FP32 R6, R5, R3
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    STO R6, (R1)+128         // z back to shared
+    SUM.FP32 R7, R6, R0      // per-wavefront sums -> lane 0
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    ADD.FP32 R8, R7@0, R7@1 {w1,d1}   // thread snooping: fold 2 wavefronts
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    STO R8, (R0)+192 {w1,d1}          // single-cycle store (flexible ISA)
+    STOP
+"""
+
+
+def main():
+    cfg = SMConfig(n_threads=32, dim_x=32, shmem_depth=256, max_steps=1000)
+    prog = assemble(ASM)
+    print(f"program: {len(prog)} words; hazards:",
+          check_hazards(prog, cfg.n_threads) or "none")
+
+    rng = np.random.default_rng(0)
+    mem = np.zeros(256, np.float32)
+    mem[0:32] = x = rng.standard_normal(32).astype(np.float32)
+    mem[64:96] = y = rng.standard_normal(32).astype(np.float32)
+
+    state = run(cfg, prog, mem)
+    out = np.asarray(shmem_f32(state))
+    z = out[128:160]
+    print("z == 2x+y:", np.allclose(z, 2 * x + y))
+    print("sum(z):", out[192], "expected:", z.sum())
+    p = profile(state)
+    print(f"cycles: {p['total_cycles']}  by class: "
+          f"{ {k: v for k, v in p['by_class'].items() if v} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: atomic npz shards, async save, elastic restore."""
+from . import ckpt
+
+__all__ = ["ckpt"]

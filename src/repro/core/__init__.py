@@ -1,0 +1,32 @@
+"""eGPU core: the paper's contribution as a composable JAX module.
+
+Public API:
+    SMConfig, MachineState, init_state  — machine model
+    assemble, disassemble, check_hazards — assembler
+    run, run_many                        — jitted ISS
+    profile                              — Table III/IV-style cycle profile
+    resources                            — Tables I/V + §III.E analytic model
+"""
+from .assembler import AsmError, Program, assemble, check_hazards, disassemble
+from .executor import pack_imem, run, run_many
+from .isa import CLASS_NAMES, Depth, Instr, Op, Typ, Width
+from .machine import (
+    MachineState,
+    SMConfig,
+    init_state,
+    profile,
+    regs_f32,
+    regs_i32,
+    shmem_f32,
+    shmem_i32,
+)
+from . import resources
+
+__all__ = [
+    "AsmError", "Program", "assemble", "check_hazards", "disassemble",
+    "pack_imem", "run", "run_many",
+    "CLASS_NAMES", "Depth", "Instr", "Op", "Typ", "Width",
+    "MachineState", "SMConfig", "init_state", "profile",
+    "regs_f32", "regs_i32", "shmem_f32", "shmem_i32",
+    "resources",
+]

@@ -1,0 +1,57 @@
+"""Sequencer cycle-cost model (paper §III.A / §III.C).
+
+The eGPU sequencer issues one instruction to the SPs as a sequence of
+wavefronts. Costs:
+
+  * FP/INT operation .... one cycle per active wavefront (16 SPs issue one
+    wavefront per clock).
+  * LOD (indexed) ....... one clock per FOUR threads: the shared memory has
+    4 read ports feeding 16 SPs in a 4-phase sequence.
+  * STO (indexed) ....... one clock per thread: single write port, 16-phase
+    writeback per wavefront. This is the bandwidth bottleneck the flexible
+    ISA exists to mitigate.
+  * LOD #imm ............ one cycle per active wavefront (broadcast through
+    the SP write port).
+  * DOT/SUM ............. one cycle per active wavefront (the dot-product
+    unit consumes a full wavefront per clock, writing lane 0).
+  * INVSQR .............. one cycle (single-lane SFU).
+  * TDx/TDy ............. one cycle per active wavefront.
+  * control ............. single cycle (zero-overhead loops: INIT and LOOP
+    are one cycle each; JMP/JSR/RTS/STOP likewise).
+  * NOP ................. one cycle.
+
+The flexible Variable field scales "active": width w in {16,8,4,1} threads,
+depth d in {full, half, quarter, single} wavefronts. Active wavefronts =
+d(block), active threads = wavefronts * w. A full 512-thread block therefore
+pays 32 cycles for an op, 128 for a load, 512 for a store — and a
+{w1,d1}-masked store pays exactly 1 (paper: "the norm writeback only
+requires a single clock cycle").
+"""
+from __future__ import annotations
+
+from .isa import Depth, Instr, Op, Width, WIDTH_THREADS
+
+
+def active_shape(width: Width, depth: Depth, n_threads: int) -> tuple[int, int]:
+    """(active_wavefronts, active_threads_per_wavefront)."""
+    n_waves = max(1, (n_threads + 15) // 16)
+    waves = {Depth.FULL: n_waves,
+             Depth.HALF: max(1, n_waves // 2),
+             Depth.QUARTER: max(1, n_waves // 4),
+             Depth.SINGLE: 1}[depth]
+    return waves, WIDTH_THREADS[width]
+
+
+def instr_cycles(ins: Instr, n_threads: int) -> int:
+    waves, wthreads = active_shape(ins.width, ins.depth, n_threads)
+    threads = waves * wthreads
+    op = ins.op
+    if op in (Op.NOP, Op.JMP, Op.JSR, Op.RTS, Op.LOOP, Op.INIT, Op.STOP,
+              Op.INVSQR):
+        return 1
+    if op == Op.LOD:
+        return max(1, (threads + 3) // 4)   # 4 read ports
+    if op == Op.STO:
+        return threads                       # 1 write port
+    # everything else is wavefront-paced: ALU, LODI, TDx/TDy, DOT, SUM
+    return waves

@@ -1,0 +1,223 @@
+"""eGPU ISA: 40-bit I-word encoding (paper Fig. 3, Table II).
+
+Bit layout (paper numbers bits [40:1]; we use 0-indexed positions [39:0]):
+
+    [39:38] WIDTH    wavefront width:  0=full(16) 1=half(8) 2=quarter(4) 3=single(1)
+    [37:36] DEPTH    block depth:      0=full     1=half    2=quarter    3=single wavefront
+    [35:30] OPCODE   6 bits (64 possible; 23 implemented + NOP)
+    [29:28] TYPE     0=INT32 1=UINT32 2=FP32
+    [27:24] RD       destination register
+    [23:20] RA       source register A (or address register for LOD/STO)
+    [19:16] RB       source register B
+    [15]    X        thread-snooping enable
+    [14:0]  IMM      15-bit immediate (sign-extended), or when X=1 the two
+                     5-bit register-address extensions: [14:10]=EXT_A, [9:5]=EXT_B
+
+The WIDTH/DEPTH pair is the paper's "Variable" field ([40:37]): the flexible
+ISA that resizes the thread block per instruction with no flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+WORD_BITS = 40
+
+# ---- field positions (lsb, nbits) ------------------------------------------
+F_IMM = (0, 15)
+F_X = (15, 1)
+F_RB = (16, 4)
+F_RA = (20, 4)
+F_RD = (24, 4)
+F_TYPE = (28, 2)
+F_OPCODE = (30, 6)
+F_DEPTH = (36, 2)
+F_WIDTH = (38, 2)
+
+# snoop sub-fields inside IMM
+F_EXT_A = (10, 5)  # within the 40-bit word: bits [14:10]
+F_EXT_B = (5, 5)   # bits [9:5]
+
+
+class Op(enum.IntEnum):
+    """Opcodes. 23 architectural instructions (Table II) + NOP."""
+
+    NOP = 0
+    # Arithmetic (typed: INT32 / UINT32 / FP32)
+    ADD = 1
+    SUB = 2
+    MUL = 3
+    # Logic
+    AND = 4
+    OR = 5
+    XOR = 6
+    NOT = 7
+    LSL = 8
+    LSR = 9
+    # Memory (shared)
+    LOD = 10   # LOD Rd (Ra)+offset
+    STO = 11   # STO Rd (Ra)+offset
+    # Immediate
+    LODI = 12  # LOD Rd #Imm
+    # Thread
+    TDX = 13
+    TDY = 14
+    # Extension units
+    DOT = 15     # wavefront dot product -> lane 0 of each active wavefront
+    SUM = 16     # wavefront reduction of (Ra + Rb) -> lane 0
+    INVSQR = 17  # SFU: 1/sqrt, lane 0 of wavefront 0
+    # Control
+    JMP = 18
+    JSR = 19
+    RTS = 20
+    LOOP = 21
+    INIT = 22
+    STOP = 23
+
+
+class Typ(enum.IntEnum):
+    INT32 = 0
+    UINT32 = 1
+    FP32 = 2
+
+
+class Width(enum.IntEnum):
+    FULL = 0      # 16 threads / wavefront
+    HALF = 1      # 8
+    QUARTER = 2   # 4
+    SINGLE = 3    # 1
+
+
+class Depth(enum.IntEnum):
+    FULL = 0      # all initialized wavefronts
+    HALF = 1
+    QUARTER = 2
+    SINGLE = 3    # one wavefront ("single cycle")
+
+
+WIDTH_THREADS = {Width.FULL: 16, Width.HALF: 8, Width.QUARTER: 4, Width.SINGLE: 1}
+
+# instruction classes for the cycle profile (Tables III / IV rows)
+CLASS_NAMES = (
+    "NOP",        # 0
+    "LOD_IMM",    # 1
+    "LOGIC",      # 2
+    "INT",        # 3  (INT32/UINT32 arith + TDx/TDy address generation)
+    "LOD_IDX",    # 4
+    "FP_ADDSUB",  # 5
+    "FP_MUL",     # 6
+    "FP_DOT",     # 7
+    "FP_SFU",     # 8
+    "STO_IDX",    # 9
+    "CONTROL",    # 10 (JMP/JSR/RTS/LOOP/INIT/STOP)
+)
+NUM_CLASSES = len(CLASS_NAMES)
+
+
+def _check(val: int, nbits: int, name: str) -> int:
+    if not 0 <= val < (1 << nbits):
+        raise ValueError(f"{name}={val} does not fit in {nbits} bits")
+    return val
+
+
+def _put(word: int, field: tuple[int, int], val: int, name: str) -> int:
+    lsb, nbits = field
+    return word | (_check(val, nbits, name) << lsb)
+
+
+def get(word: int, field: tuple[int, int]) -> int:
+    lsb, nbits = field
+    return (word >> lsb) & ((1 << nbits) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """Decoded instruction (assembler-side representation)."""
+
+    op: Op
+    typ: Typ = Typ.INT32
+    rd: int = 0
+    ra: int = 0
+    rb: int = 0
+    imm: int = 0          # signed, -(2**14) .. 2**14-1 (or unsigned address)
+    x: int = 0            # snoop enable
+    ext_a: int = 0        # snoop wavefront index for RA (0..31)
+    ext_b: int = 0        # snoop wavefront index for RB
+    width: Width = Width.FULL
+    depth: Depth = Depth.FULL
+
+    def encode(self) -> int:
+        word = 0
+        word = _put(word, F_WIDTH, int(self.width), "width")
+        word = _put(word, F_DEPTH, int(self.depth), "depth")
+        word = _put(word, F_OPCODE, int(self.op), "opcode")
+        word = _put(word, F_TYPE, int(self.typ), "type")
+        word = _put(word, F_RD, self.rd, "rd")
+        word = _put(word, F_RA, self.ra, "ra")
+        word = _put(word, F_RB, self.rb, "rb")
+        word = _put(word, F_X, self.x, "x")
+        if self.x:
+            if self.imm:
+                raise ValueError("snooping (X=1) reuses the immediate field")
+            word = _put(word, F_EXT_A, self.ext_a, "ext_a")
+            word = _put(word, F_EXT_B, self.ext_b, "ext_b")
+        else:
+            imm = self.imm
+            if not -(1 << 14) <= imm < (1 << 15):
+                raise ValueError(f"immediate {imm} out of range for 15 bits")
+            word = _put(word, F_IMM, imm & 0x7FFF, "imm")
+        return word
+
+    @staticmethod
+    def decode(word: int) -> "Instr":
+        x = get(word, F_X)
+        raw_imm = get(word, F_IMM)
+        imm = raw_imm - (1 << 15) if (raw_imm & (1 << 14)) else raw_imm
+        op = Op(get(word, F_OPCODE))
+        # control-flow addresses are unsigned
+        if op in (Op.JMP, Op.JSR, Op.LOOP, Op.INIT):
+            imm = raw_imm
+        return Instr(
+            op=op,
+            typ=Typ(get(word, F_TYPE)),
+            rd=get(word, F_RD),
+            ra=get(word, F_RA),
+            rb=get(word, F_RB),
+            imm=0 if x else imm,
+            x=x,
+            ext_a=get(word, F_EXT_A) if x else 0,
+            ext_b=get(word, F_EXT_B) if x else 0,
+            width=Width(get(word, F_WIDTH)),
+            depth=Depth(get(word, F_DEPTH)),
+        )
+
+
+# opcode -> profile class (operand-type dependent ops resolved at decode time)
+def instr_class(op: Op, typ: Typ) -> int:
+    if op == Op.NOP:
+        return 0
+    if op == Op.LODI:
+        return 1
+    if op in (Op.AND, Op.OR, Op.XOR, Op.NOT, Op.LSL, Op.LSR):
+        return 2
+    if op in (Op.ADD, Op.SUB, Op.MUL):
+        if typ == Typ.FP32:
+            return 6 if op == Op.MUL else 5
+        return 3
+    if op in (Op.TDX, Op.TDY):
+        return 3
+    if op == Op.LOD:
+        return 4
+    if op == Op.STO:
+        return 9
+    if op in (Op.DOT, Op.SUM):
+        return 7
+    if op == Op.INVSQR:
+        return 8
+    return 10  # control
+
+
+# latency (pipeline occupancy) of the result, in cycles, for hazard checking.
+# Paper: 9-stage pipeline for both INT and FP operations; loads/stores have
+# their own (sequencer-dominated) latencies.
+RESULT_LATENCY = 9

@@ -1,0 +1,131 @@
+"""eGPU machine configuration and architectural state.
+
+One SM = 16 SPs, 512 threads max, 16 registers/thread (one M20K per two
+registers: the 512x32 M20K geometry is what fixed these numbers in the
+paper). Shared memory is quad-read-port / single-write-port; depth is
+parameterizable (the §III.E sector-packing budget gives 3K words when four
+SMs share one Agilex sector).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_SP = 16                # scalar processors per SM
+MAX_THREADS = 512        # threads per SM
+N_REGS = 16              # registers per thread
+MAX_WAVES = MAX_THREADS // N_SP
+RET_STACK_DEPTH = 8
+LOOP_STACK_DEPTH = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SMConfig:
+    """Static (trace-time) machine parameters."""
+
+    n_threads: int = MAX_THREADS       # initialized threads (<= 512)
+    dim_x: int = 16                    # 2D thread space: x dimension
+    shmem_depth: int = 3072            # words (12 KiB: §III.E sector budget)
+    imem_depth: int = 512              # one M20K of 512x40
+    max_steps: int = 100_000           # ISS fuel
+    with_dot: bool = True              # dot-product extension unit
+    with_sfu: bool = True              # inverse-sqrt SFU
+
+    def __post_init__(self):
+        if not 1 <= self.n_threads <= MAX_THREADS:
+            raise ValueError(f"n_threads={self.n_threads} not in [1, {MAX_THREADS}]")
+        if self.n_threads % self.dim_x:
+            raise ValueError("n_threads must be divisible by dim_x")
+
+    @property
+    def dim_y(self) -> int:
+        return self.n_threads // self.dim_x
+
+    @property
+    def n_waves(self) -> int:
+        return max(1, (self.n_threads + N_SP - 1) // N_SP)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MachineState:
+    """Architectural + profiling state (a JAX pytree; scanned by the ISS)."""
+
+    regs: jax.Array        # (MAX_THREADS, N_REGS) uint32
+    shmem: jax.Array       # (shmem_depth,) uint32
+    pc: jax.Array          # () int32
+    ret_stack: jax.Array   # (RET_STACK_DEPTH,) int32
+    ret_sp: jax.Array      # () int32
+    loop_ctr: jax.Array    # (LOOP_STACK_DEPTH,) int32
+    loop_sp: jax.Array     # () int32
+    halted: jax.Array      # () bool
+    oob: jax.Array         # () bool — any out-of-range shared-memory access
+    steps: jax.Array       # () int32 — instructions executed
+    cycles: jax.Array      # () int32 — sequencer cycles (cost model)
+    cycles_by_class: jax.Array  # (NUM_CLASSES,) int32
+
+
+def init_state(cfg: SMConfig, shmem: np.ndarray | None = None) -> MachineState:
+    from .isa import NUM_CLASSES
+
+    if shmem is None:
+        sh = jnp.zeros((cfg.shmem_depth,), jnp.uint32)
+    else:
+        sh = jnp.asarray(shmem)
+        if sh.dtype in (jnp.float32, np.float32):
+            sh = jax.lax.bitcast_convert_type(sh.astype(jnp.float32), jnp.uint32)
+        sh = sh.astype(jnp.uint32)
+        if sh.shape != (cfg.shmem_depth,):
+            pad = cfg.shmem_depth - sh.shape[0]
+            if pad < 0:
+                raise ValueError(f"shared-memory image larger than {cfg.shmem_depth}")
+            sh = jnp.pad(sh, (0, pad))
+    return MachineState(
+        regs=jnp.zeros((MAX_THREADS, N_REGS), jnp.uint32),
+        shmem=sh,
+        pc=jnp.zeros((), jnp.int32),
+        ret_stack=jnp.zeros((RET_STACK_DEPTH,), jnp.int32),
+        ret_sp=jnp.zeros((), jnp.int32),
+        loop_ctr=jnp.zeros((LOOP_STACK_DEPTH,), jnp.int32),
+        loop_sp=jnp.zeros((), jnp.int32),
+        halted=jnp.zeros((), jnp.bool_),
+        oob=jnp.zeros((), jnp.bool_),
+        steps=jnp.zeros((), jnp.int32),
+        cycles=jnp.zeros((), jnp.int32),
+        cycles_by_class=jnp.zeros((NUM_CLASSES,), jnp.int32),
+    )
+
+
+def shmem_f32(state: MachineState) -> jax.Array:
+    return jax.lax.bitcast_convert_type(state.shmem, jnp.float32)
+
+
+def shmem_i32(state: MachineState) -> jax.Array:
+    return jax.lax.bitcast_convert_type(state.shmem, jnp.int32)
+
+
+def regs_f32(state: MachineState) -> jax.Array:
+    return jax.lax.bitcast_convert_type(state.regs, jnp.float32)
+
+
+def regs_i32(state: MachineState) -> jax.Array:
+    return jax.lax.bitcast_convert_type(state.regs, jnp.int32)
+
+
+def profile(state: MachineState) -> dict[str, Any]:
+    """Cycle profile by instruction class — the Tables III/IV view."""
+    from .isa import CLASS_NAMES
+
+    by = np.asarray(state.cycles_by_class)
+    total = int(by.sum())
+    return {
+        "total_cycles": total,
+        "instructions": int(state.steps),
+        "by_class": {n: int(c) for n, c in zip(CLASS_NAMES, by)},
+        "pct_by_class": {n: (100.0 * int(c) / total if total else 0.0)
+                         for n, c in zip(CLASS_NAMES, by)},
+    }

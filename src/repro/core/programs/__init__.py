@@ -1,0 +1,12 @@
+"""eGPU assembly programs: the paper's benchmarks + extras."""
+from .fft import bitrev_indices, fft_asm, fft_shmem, run_fft
+from .qrd import qrd_asm, qrd_shmem, run_qrd
+from .reduction import reduction_asm, run_reduction
+from .saxpy import run_saxpy, saxpy_asm
+
+__all__ = [
+    "bitrev_indices", "fft_asm", "fft_shmem", "run_fft",
+    "qrd_asm", "qrd_shmem", "run_qrd",
+    "reduction_asm", "run_reduction",
+    "saxpy_asm", "run_saxpy",
+]

@@ -1,0 +1,68 @@
+"""Reduction benchmark (paper §III.D): sum 512 values without shared memory.
+
+Stage 1: SUM per wavefront -> 32 partials in lane 0 (SP0's register file).
+Stage 2: thread snooping — thread 0 reads every wavefront's lane-0 partial
+directly ("without having to go through the shared memory") and folds them
+with a NOP-padded accumulation tree that respects the 9-cycle RAW window.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..assembler import Program, assemble
+from ..executor import run
+from ..machine import SMConfig, shmem_f32
+
+
+def reduction_asm(n_threads: int = 512) -> str:
+    n_waves = max(1, n_threads // 16)
+    lines = ["    TDX R1",
+             "    LOD R2, (R1)+0            // x[tid]",
+             "    SUM.FP32 R3, R2, R0       // wavefront partials -> lane0"]
+    # fold pairs via snooping: R4..R9 hold independent accumulator chains
+    # (6 chains keep dependent uses >= 9 cycles apart without NOPs).
+    accs = [4, 5, 6, 7, 8, 9]
+    n_chains = min(len(accs), max(1, n_waves // 2))
+    for c in range(n_chains):
+        w0, w1 = 2 * c, 2 * c + 1 if 2 * c + 1 < n_waves else 2 * c
+        lines.append(f"    ADD.FP32 R{accs[c]}, R3@{w0}, R3@{w1} {{d1}}")
+    for w in range(2 * n_chains, n_waves):
+        c = w % n_chains
+        lines.append(f"    ADD.FP32 R{accs[c]}, R{accs[c]}, R3@{w} {{d1}}")
+        if n_chains < 6:
+            lines.append("    NOP\n    NOP\n    NOP\n    NOP")
+    # fold the chains (single thread; pad the RAW window)
+    lines.append("    NOP\n    NOP\n    NOP\n    NOP\n    NOP\n    NOP\n"
+                 "    NOP\n    NOP")
+    live = accs[:n_chains]
+    while len(live) > 1:
+        nxt = []
+        for i in range(0, len(live) - 1, 2):
+            lines.append(f"    ADD.FP32 R{live[i]}, R{live[i]}, R{live[i+1]} {{w1,d1}}")
+            nxt.append(live[i])
+        if len(live) % 2:
+            nxt.append(live[-1])
+        live = nxt
+        lines.append("    NOP\n    NOP\n    NOP\n    NOP\n    NOP\n    NOP\n"
+                     "    NOP\n    NOP")
+    lines.append(f"    STO R{live[0]}, (R0)+{n_threads} {{w1,d1}}  // result")
+    lines.append("    STOP")
+    return "\n".join(lines)
+
+
+def reduction_program(n_threads: int = 512) -> Program:
+    return assemble(reduction_asm(n_threads))
+
+
+def run_reduction(x: np.ndarray):
+    """Sum x (length <= 512) on the eGPU; returns (total, final_state)."""
+    n = int(x.shape[0])
+    if n % 16:
+        raise ValueError("length must be a multiple of 16")
+    cfg = SMConfig(n_threads=n, dim_x=n, shmem_depth=max(n + 16, 64),
+                   max_steps=50_000)
+    img = np.zeros(cfg.shmem_depth, np.float32)
+    img[:n] = np.asarray(x, np.float32)
+    state = run(cfg, reduction_program(n), img)
+    total = float(np.asarray(shmem_f32(state))[n])
+    return total, state

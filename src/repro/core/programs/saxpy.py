@@ -1,0 +1,63 @@
+"""SAXPY on the eGPU: z = alpha*x + y. The 'hello world' program.
+
+Layout: x at [0, n), y at [n, 2n), z at [2n, 3n); alpha broadcast from
+shared memory slot 3n (an FP32 immediate cannot be encoded in 15 bits).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..assembler import Program, assemble
+from ..executor import run
+from ..machine import SMConfig, shmem_f32
+
+
+def saxpy_asm(n: int) -> str:
+    return f"""
+    TDX R1
+    LOD R4, (R0)+{3 * n}      // alpha (broadcast: every thread, same addr)
+    LOD R2, (R1)+0            // x[tid]
+    LOD R3, (R1)+{n}          // y[tid]
+    NOP
+    NOP
+    NOP
+    MUL.FP32 R5, R2, R4
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    ADD.FP32 R6, R5, R3
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    NOP
+    STO R6, (R1)+{2 * n}
+    STOP
+"""
+
+
+def saxpy_program(n: int) -> Program:
+    return assemble(saxpy_asm(n))
+
+
+def run_saxpy(alpha: float, x: np.ndarray, y: np.ndarray):
+    n = int(x.shape[0])
+    if n % 16 or n > 512:
+        raise ValueError("length must be a multiple of 16, <= 512")
+    cfg = SMConfig(n_threads=n, dim_x=n, shmem_depth=3 * n + 16,
+                   max_steps=10_000)
+    img = np.zeros(cfg.shmem_depth, np.float32)
+    img[:n] = x
+    img[n:2 * n] = y
+    img[3 * n] = alpha
+    state = run(cfg, saxpy_program(n), img)
+    z = np.asarray(shmem_f32(state))[2 * n:3 * n].copy()
+    return z, state

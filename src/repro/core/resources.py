@@ -1,0 +1,190 @@
+"""Analytical resource / Fmax model (paper Tables I & V, §III.E, §V).
+
+There is no RTL here — a JAX program has no Fmax. This module encodes the
+paper's published block inventory and the sector-packing arithmetic so the
+benchmarks can *reproduce the paper's numbers* and so configuration
+variants (shared-memory depth, optional dot/SFU units, SM count) get a
+first-order resource estimate by the same method the paper uses.
+
+Paper ground truth (Agilex AGFB014R24A1E1V, Quartus 22.4.0 Pro):
+
+  Table V                 ALM   Registers  DSP   M20K
+    Instruction section    235      540      0     2
+    SM (1x16SP)           5372    14996     24    48
+    SP                     267      794    1.5     2
+    INT ALU                114      249    0.5     0
+
+  Table I: eGPU = 5K ALM / 24 DSP / 771 MHz  (FGPU 57K/48/250,
+           FlexGrip 100K/300/100)
+
+  §V: 771 MHz unconstrained (DSP FP32 MAC critical path), 831 MHz soft
+      logic alone, 738 MHz (~5% penalty) for the quad-packed sector.
+
+  §III.E sector: 16,400 ALMs / 164 DSP / 237 M20K; 4 SMs per sector =>
+      96 DSP + 128 M20K used by SMs, 27 shared-memory M20Ks per eGPU
+      (quad-read-port => 4 copies => 6-deep of 512 = 3K words = 12 KiB),
+      16 DSP per eGPU for the dot-product unit, 4100 ALM budget per eGPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .machine import N_SP, SMConfig
+
+# ---- process/device constants (Agilex, paper §V) ----------------------------
+FMAX_DSP_FP32_MHZ = 771.0     # DSP Block FP32 multiply-add mode limit
+FMAX_SOFT_LOGIC_MHZ = 831.0   # INT ALU & control, best achieved
+QUAD_PACK_DERATE = 0.957      # 771 -> 738 MHz observed (~5%)
+
+# ---- Agilex sector contents (§III.E, [22]) ----------------------------------
+SECTOR_ALMS = 16_400
+SECTOR_DSPS = 164
+SECTOR_M20KS = 237
+M20K_BITS = 20 * 1024
+M20K_WORDS_32B = 512          # 512 x 32b (or 512 x 40b for I-MEM)
+
+# ---- per-block inventory (Table V) ------------------------------------------
+SP_ALM = 267
+SP_REGS = 794
+SP_DSP = 1.5                  # 1 DSP for FP MAC + half for the INT 16x16 mul
+SP_M20K = 2                   # register file: 512x32 as 2R1W needs 2 copies
+INT_ALU_ALM = 114
+INT_ALU_REGS = 249
+INT_ALU_DSP = 0.5
+INSTR_ALM = 235
+INSTR_REGS = 540
+INSTR_M20K = 2                # I-MEM (parameterizable; 2 x 512x40 default)
+SM_ALM = 5372                 # measured whole-SM numbers (> 16*SP: includes
+SM_REGS = 14996               # sequencer, shared-memory interconnect, etc.)
+SM_DSP = 24                   # 16 FP + 8 (16 x 0.5) INT
+SM_M20K = 48                  # 32 regfile + 16 (shared memory + I-MEM)
+DOT_UNIT_DSP = 16             # §III.E: dot-product core per eGPU
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceReport:
+    alms: float
+    registers: float
+    dsps: float
+    m20ks: float
+
+    def __add__(self, o: "ResourceReport") -> "ResourceReport":
+        return ResourceReport(self.alms + o.alms, self.registers + o.registers,
+                              self.dsps + o.dsps, self.m20ks + o.m20ks)
+
+    def scale(self, k: float) -> "ResourceReport":
+        return ResourceReport(self.alms * k, self.registers * k,
+                              self.dsps * k, self.m20ks * k)
+
+
+def sp_report() -> ResourceReport:
+    return ResourceReport(SP_ALM, SP_REGS, SP_DSP, SP_M20K)
+
+
+def int_alu_report() -> ResourceReport:
+    return ResourceReport(INT_ALU_ALM, INT_ALU_REGS, INT_ALU_DSP, 0)
+
+
+def instruction_report(imem_m20ks: int = INSTR_M20K) -> ResourceReport:
+    return ResourceReport(INSTR_ALM, INSTR_REGS, 0, imem_m20ks)
+
+
+def shared_memory_m20ks(depth_words: int) -> int:
+    """Quad-read-port shared memory = 4 identical copies (paper §III.A)."""
+    per_copy = -(-depth_words // M20K_WORDS_32B)  # ceil
+    return 4 * per_copy
+
+
+def sm_report(cfg: SMConfig | None = None) -> ResourceReport:
+    """Whole-SM resources. With the default config this returns the paper's
+    measured Table V row; config variants get a first-order estimate built
+    from the block inventory."""
+    if cfg is None:
+        cfg = SMConfig()
+    base = ResourceReport(SM_ALM, SM_REGS, SM_DSP, 0)
+    m20k = 2 * N_SP                                  # register files
+    m20k += shared_memory_m20ks(cfg.shmem_depth)     # 3072 words -> 24... see note
+    m20k += -(-cfg.imem_depth // M20K_WORDS_32B)     # I-MEM (per 512x40)
+    dsp = base.dsps + (DOT_UNIT_DSP if cfg.with_dot else 0)
+    # Table V's 48 M20K = 32 regfile + 14 shared (1.75K words quad-ported)
+    # + 2 I-MEM; the *benchmarked* single-SM build used a shallower shared
+    # memory than the §III.E sector budget. We report the configured value.
+    return ResourceReport(base.alms, base.registers, dsp, m20k)
+
+
+def table_v() -> dict[str, ResourceReport]:
+    """The paper's measured Table V, verbatim (oracle for tests)."""
+    return {
+        "Instruction": ResourceReport(INSTR_ALM, INSTR_REGS, 0, 2),
+        "SM": ResourceReport(SM_ALM, SM_REGS, SM_DSP, SM_M20K),
+        "SP": ResourceReport(SP_ALM, SP_REGS, SP_DSP, SP_M20K),
+        "INT ALU": ResourceReport(INT_ALU_ALM, INT_ALU_REGS, INT_ALU_DSP, 0),
+    }
+
+
+def table_i() -> dict[str, dict]:
+    """Table I comparison (eGPU row derived from our model: the base
+    1SMx16SP build — no dot-product extension, as benchmarked in §V)."""
+    return {
+        "FGPU":     {"config": "2CUx8PE",  "alm": 57_000, "dsp": 48,  "fmax_mhz": 250},
+        "FlexGrip": {"config": "1SMx16PE", "alm": 100_000, "dsp": 300, "fmax_mhz": 100},
+        "eGPU":     {"config": "1SMx16SP", "alm": SM_ALM, "dsp": SM_DSP,
+                     "fmax_mhz": round(fmax_mhz(n_instances=1))},
+    }
+
+
+def fmax_mhz(n_instances: int = 1, use_dsp_fp32: bool = True) -> float:
+    """Fmax model: DSP FP32 mode limits an unconstrained single-core compile
+    to 771 MHz; soft logic alone reaches 831; quad-sector packing costs ~5%."""
+    base = FMAX_DSP_FP32_MHZ if use_dsp_fp32 else FMAX_SOFT_LOGIC_MHZ
+    return base if n_instances <= 1 else base * QUAD_PACK_DERATE
+
+
+@dataclasses.dataclass(frozen=True)
+class SectorPacking:
+    """§III.E packing arithmetic for N SMs in one Agilex sector."""
+
+    sms_per_sector: int
+    regfile_m20ks: int
+    dsps_for_sms: int
+    m20ks_left: int
+    shared_copies_per_egpu: int     # 512x32 memories per eGPU (quad-ported)
+    shared_depth_words: int
+    shared_bytes: int
+    dsps_left: int
+    dot_dsps_per_egpu: int
+    alm_budget_per_egpu: int
+
+
+def pack_sector(sms: int = 4) -> SectorPacking:
+    regfile = 2 * N_SP * sms                   # 128 for 4 SMs
+    dsp_sm = SM_DSP * sms                      # 96
+    m20k_left = SECTOR_M20KS - regfile         # 109
+    shared_copies = m20k_left // sms           # 27 per eGPU
+    # quad read port => 4 copies; depth = (copies // 4) * 512 words
+    depth = (shared_copies // 4) * M20K_WORDS_32B   # 6 deep -> 3072 words
+    dsp_left = SECTOR_DSPS - dsp_sm            # 68
+    # a dot-product core needs one DSP per lane: 16 (17 remain per eGPU)
+    dot = min(DOT_UNIT_DSP, dsp_left // sms)
+    return SectorPacking(
+        sms_per_sector=sms,
+        regfile_m20ks=regfile,
+        dsps_for_sms=dsp_sm,
+        m20ks_left=m20k_left,
+        shared_copies_per_egpu=shared_copies,
+        shared_depth_words=depth,
+        shared_bytes=depth * 4,
+        dsps_left=dsp_left,
+        dot_dsps_per_egpu=dot,
+        alm_budget_per_egpu=SECTOR_ALMS // sms,  # 4100
+    )
+
+
+def peak_gflops(n_sms: int = 1, fmax: float | None = None,
+                with_dot: bool = True) -> float:
+    """Peak FP32 throughput of the modelled machine (for the benchmark
+    efficiency numbers): 16 SP MACs (2 flops) + optionally the dot unit's
+    16 mul + 15 add per cycle."""
+    f = (fmax if fmax is not None else fmax_mhz(n_sms)) * 1e6
+    flops_per_cycle = N_SP * 2 + (31 if with_dot else 0)
+    return n_sms * flops_per_cycle * f / 1e9

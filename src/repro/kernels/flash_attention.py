@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash-style causal attention (online softmax).
+
+The §Perf hillclimb showed 32k prefill is dominated by materialized S^2
+score tiles (EXPERIMENTS.md cell C); the jnp-level fix (blocked causal
+attention) halves traffic, but the full win — score tiles that never leave
+VMEM — needs a kernel. This is it: one (batch*head) x q-block grid cell
+holds a (blk_q, D) query tile plus the whole (S, D) K/V stripe in VMEM
+(32k x 128 x bf16 = 8 MiB) and runs the numerically-stable online-softmax
+recurrence over k-blocks:
+
+    m' = max(m, rowmax(S_blk))            S_blk = q k^T / sqrt(D)
+    l' = e^{m-m'} l + rowsum(e^{S_blk - m'})
+    acc' = e^{m-m'} acc + e^{S_blk - m'} v_blk
+
+Causality is enforced with global row/col indices; fully-masked k-blocks
+(those entirely in the future) are skipped by bounding the k-loop at the
+q-block's last row. The oracle is plain softmax attention (ref.py-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
+                  seq: int, causal: bool):
+    j = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (blk_q, D)
+    D = q.shape[-1]
+    scale = 1.0 / np.sqrt(D)
+    q_row0 = j * blk_q
+
+    n_kblocks = seq // blk_k
+    if causal:
+        # k-blocks strictly beyond this q-block's last row are all-masked
+        last_row = q_row0 + blk_q - 1
+        n_live = jnp.minimum((last_row // blk_k) + 1, n_kblocks)
+    else:
+        n_live = n_kblocks
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], kb * blk_k, blk_k).astype(jnp.float32)   # (blk_k, D)
+        v_blk = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], kb * blk_k, blk_k).astype(jnp.float32)
+        s = (q @ k_blk.T) * scale                     # (blk_q, blk_k)
+        if causal:
+            rows = q_row0 + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 0)
+            cols = kb * blk_k + jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))   # (blk_q,)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, D), jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_live, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, D) — heads folded into the leading dim (GQA
+    repetition is the wrapper's job). Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    if S % blk_q or S % blk_k:
+        raise ValueError(f"S={S} must be a multiple of blk_q/blk_k")
+    grid = (BH, S // blk_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k, seq=S,
+                          causal=causal),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, blk_q, D), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((1, S, D), lambda i, j: (i, 0, 0)),
+                  pl.BlockSpec((1, S, D), lambda i, j: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda i, j: (i, j, 0)),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle: plain softmax attention on (BH, S, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    if causal:
+        S = q.shape[1]
+        i = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+        jx = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+        s = jnp.where(jx <= i, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched Modified Gram-Schmidt QRD (the paper's
+flagship benchmark, §IV.B, as a TPU-native fused kernel).
+
+The eGPU exists to make SMALL dense linear algebra efficient — 16x16 QRD is
+the case where big GPUs achieve single-digit efficiency (paper refs
+[24][25]). The TPU analogue of that insight: batch many small matrices into
+one VMEM-resident tile and run the whole factorization without touching HBM
+between iterations (the eGPU's shared-memory-resident dataset, scaled to
+VMEM). Iterations are branch-free — finished columns carry zero residuals,
+exactly like the eGPU assembly — so there is no divergence and no dynamic
+slicing on the minor dimension (TPU-hostile); columns are selected with a
+one-hot mask, and norms use rsqrt (the SFU).
+
+Layout: (B, n, n) f32, column index minor. A block of 32 16x16 matrices is
+32 KiB; operands+outputs stay well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mgs_kernel(a_ref, q_ref, r_ref):
+    a = a_ref[...]
+    B, n, _ = a.shape
+    eye = jnp.eye(n, dtype=a.dtype)
+
+    def body(j, carry):
+        res, q, r = carry
+        onehot = eye[j]                                     # (n,)
+        aj = jnp.sum(res * onehot[None, None, :], axis=2)   # (B, n) column j
+        nrm2 = jnp.sum(aj * aj, axis=1, keepdims=True)
+        recip = jax.lax.rsqrt(nrm2)                         # the SFU
+        qj = aj * recip
+        rrow = jnp.sum(qj[:, :, None] * res, axis=1)        # (B, n) row j of R
+        res = res - qj[:, :, None] * rrow[:, None, :]
+        q = q + qj[:, :, None] * onehot[None, None, :]
+        r = r + rrow[:, None, :] * onehot[None, :, None]
+        return res, q, r
+
+    _, q, r = jax.lax.fori_loop(
+        0, n, body, (a, jnp.zeros_like(a), jnp.zeros_like(a)))
+    q_ref[...] = q
+    r_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def mgs_qrd(a: jax.Array, *, interpret: bool = True,
+            block_b: int = 32) -> tuple[jax.Array, jax.Array]:
+    """Batched QRD: (B, n, n) -> (Q, R), MGS column algorithm in VMEM."""
+    B, n, n2 = a.shape
+    if n != n2:
+        raise ValueError("square matrices only")
+    block_b = min(block_b, B)
+    if B % block_b:
+        raise ValueError(f"B={B} must be a multiple of block_b={block_b}")
+    grid = (B // block_b,)
+    spec = pl.BlockSpec((block_b, n, n), lambda i: (i, 0, 0))
+    q, r = pl.pallas_call(
+        _mgs_kernel,
+        out_shape=(jax.ShapeDtypeStruct((B, n, n), jnp.float32),
+                   jax.ShapeDtypeStruct((B, n, n), jnp.float32)),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=(spec, spec),
+        interpret=interpret,
+    )(a.astype(jnp.float32))
+    return q, r

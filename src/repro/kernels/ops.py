@@ -1,0 +1,50 @@
+"""Public jit'd entry points for the kernel layer.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated via the Pallas interpreter against
+the ``ref.py`` oracles). On a real TPU backend set
+``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fft_r2 import fft_r2
+from .flash_attention import flash_attention
+from .mgs_qrd import mgs_qrd
+from .simt_alu import simt_alu
+from .wavefront_dot import wavefront_dot
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def alu(op, typ, a, b, mask, old, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return simt_alu(jnp.asarray(op), jnp.asarray(typ), a, b, mask, old, **kw)
+
+
+def dot(a, b, mask=None, mode=0, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    if mask is None:
+        mask = jnp.ones(a.shape, jnp.float32)
+    return wavefront_dot(a, b, mask, jnp.asarray(mode), **kw)
+
+
+def qrd(a, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return mgs_qrd(a, **kw)
+
+
+def fft(re, im, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return fft_r2(re, im, **kw)
+
+
+def flash(q, k, v, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return flash_attention(q, k, v, **kw)
+
+
+__all__ = ["alu", "dot", "qrd", "fft", "flash", "ref", "INTERPRET"]

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` truth).
+
+These are deliberately straightforward implementations — no tiling, no
+memory-space reasoning — used by tests and as CPU fallbacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# opcode numbering shared with the kernels (subset of core.isa.Op that the
+# SIMT ALU executes)
+ALU_ADD, ALU_SUB, ALU_MUL = 1, 2, 3
+ALU_AND, ALU_OR, ALU_XOR, ALU_NOT = 4, 5, 6, 7
+ALU_LSL, ALU_LSR = 8, 9
+TYP_INT32, TYP_UINT32, TYP_FP32 = 0, 1, 2
+
+
+def _sext16(x):
+    low = x & 0xFFFF
+    return low | (((low >> 15) & 1) * jnp.uint32(0xFFFF0000))
+
+
+def alu_ref(op: jax.Array, typ: jax.Array, a_u32: jax.Array,
+            b_u32: jax.Array) -> jax.Array:
+    """eGPU SIMT ALU semantics on uint32 lanes (any shape)."""
+    a_f = jax.lax.bitcast_convert_type(a_u32, jnp.float32)
+    b_f = jax.lax.bitcast_convert_type(b_u32, jnp.float32)
+    add_u = a_u32 + b_u32
+    sub_u = a_u32 - b_u32
+    mul_int = _sext16(a_u32) * _sext16(b_u32)
+    mul_uint = (a_u32 & 0xFFFF) * (b_u32 & 0xFFFF)
+    mul_u = jnp.where(typ == TYP_UINT32, mul_uint, mul_int)
+    sh = b_u32 & 31
+    res_int = jnp.select(
+        [op == ALU_ADD, op == ALU_SUB, op == ALU_MUL, op == ALU_AND,
+         op == ALU_OR, op == ALU_XOR, op == ALU_NOT, op == ALU_LSL],
+        [add_u, sub_u, mul_u, a_u32 & b_u32, a_u32 | b_u32, a_u32 ^ b_u32,
+         ~a_u32, a_u32 << sh],
+        a_u32 >> sh)
+    res_fp = jax.lax.bitcast_convert_type(jnp.select(
+        [op == ALU_ADD, op == ALU_SUB], [a_f + b_f, a_f - b_f], a_f * b_f),
+        jnp.uint32)
+    fp_op = (typ == TYP_FP32) & ((op == ALU_ADD) | (op == ALU_SUB)
+                                 | (op == ALU_MUL))
+    return jnp.where(fp_op, res_fp, res_int)
+
+
+def wavefront_dot_ref(a: jax.Array, b: jax.Array, active: jax.Array,
+                      n_sp: int = 16) -> jax.Array:
+    """Per-wavefront dot product: (..., n_threads) f32 -> (..., n_waves).
+
+    The eGPU dot unit multiplies a wavefront's a*b lanewise and reduces;
+    inactive lanes contribute zero (flexible-ISA masking).
+    """
+    *lead, n = a.shape
+    waves = n // n_sp
+    a2 = a.reshape(*lead, waves, n_sp)
+    b2 = b.reshape(*lead, waves, n_sp)
+    m2 = active.reshape(*lead, waves, n_sp)
+    return jnp.sum(jnp.where(m2, a2 * b2, 0.0), axis=-1)
+
+
+def mgs_qrd_ref(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched Modified Gram-Schmidt QRD: (B, n, n) -> (Q, R).
+
+    Column version, exactly the eGPU benchmark's math: q_j = a_j/||a_j||
+    (via rsqrt, the SFU), r_jk = <q_j, a_k>, a_k -= r_jk q_j. Branch-free:
+    already-finished columns have zero residuals.
+    """
+    B, n, _ = a.shape
+    q = jnp.zeros_like(a)
+    r = jnp.zeros_like(a)
+    eye = jnp.eye(n, dtype=a.dtype)
+
+    def body(j, carry):
+        res, q, r = carry
+        onehot = eye[j]                                     # (n,)
+        aj = jnp.sum(res * onehot[None, None, :], axis=2)   # (B, n)
+        recip = jax.lax.rsqrt(jnp.sum(aj * aj, axis=1, keepdims=True))
+        qj = aj * recip                                     # (B, n)
+        rrow = jnp.einsum("bi,bik->bk", qj, res)            # (B, n)
+        res = res - qj[:, :, None] * rrow[:, None, :]
+        q = q + qj[:, :, None] * onehot[None, None, :]
+        r = r + rrow[:, None, :] * onehot[None, :, None]
+        return res, q, r
+
+    _, q, r = jax.lax.fori_loop(0, n, body, (a, q, r))
+    return q, r
+
+
+def fft_r2_ref(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched radix-2 DIF FFT, natural-order output: (B, N) f32 planes."""
+    x = (re + 1j * im).astype(jnp.complex64)
+    y = jnp.fft.fft(x, axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def fft_r2_ref_br(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Same, but in the kernel's bit-reversed output order."""
+    n = re.shape[-1]
+    rr, ri = fft_r2_ref(re, im)
+    idx = bitrev(n)
+    return rr[..., idx], ri[..., idx]
+
+
+def bitrev(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    out = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        out |= ((idx >> b) & 1) << (bits - 1 - b)
+    return out

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: the eGPU wavefront dot-product / reduction unit.
+
+The paper's DOT extension consumes one 16-lane wavefront per cycle
+(16 multiplies + 15 adds = 31 flops/instruction) and writes the result to
+lane 0. TPU adaptation: batch (n_sm, 512) thread vectors, reshape each
+512-thread block to (32 waves, 16 lanes) inside VMEM and reduce the lane
+axis on the VPU. SUM mode reduces (a + b) instead of a*b — both modes of
+the paper's extension unit in one kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_THREADS = 512
+N_SP = 16
+N_WAVES = N_THREADS // N_SP
+
+
+def _dot_kernel(mode_ref, a_ref, b_ref, mask_ref, out_ref):
+    blk = a_ref.shape[0]
+    a = a_ref[...].reshape(blk, N_WAVES, N_SP)
+    b = b_ref[...].reshape(blk, N_WAVES, N_SP)
+    m = mask_ref[...].reshape(blk, N_WAVES, N_SP)
+    prod = jnp.where(mode_ref[0] == 0, a * b, a + b)
+    out_ref[...] = jnp.sum(jnp.where(m != 0, prod, 0.0), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_sm"))
+def wavefront_dot(a: jax.Array, b: jax.Array, mask: jax.Array,
+                  mode: jax.Array, *, interpret: bool = True,
+                  block_sm: int = 8) -> jax.Array:
+    """(n_sm, 512) f32 x2 + mask -> (n_sm, 32) per-wavefront reductions.
+
+    mode 0 = DOT (sum a*b), 1 = SUM (sum a+b). Lane-0 writeback is the
+    caller's scatter (it is a register-file update, not kernel math).
+    """
+    n_sm = a.shape[0]
+    block_sm = min(block_sm, n_sm)
+    if n_sm % block_sm:
+        raise ValueError(f"n_sm={n_sm} must be a multiple of block_sm={block_sm}")
+    grid = (n_sm // block_sm,)
+    in_spec = pl.BlockSpec((block_sm, N_THREADS), lambda i: (i, 0))
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_sm, N_WAVES), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)),
+                  in_spec, in_spec, in_spec],
+        out_specs=pl.BlockSpec((block_sm, N_WAVES), lambda i: (i, 0)),
+        interpret=interpret,
+    )(mode.reshape(1).astype(jnp.int32), a, b, mask.astype(jnp.float32))

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Single pod:  (16, 16)    axes ("data", "model")       = 256 chips
+Multi pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+The sharding discipline (launch/shardings.py):
+  * batch over ("pod", "data") — pure DP across pods (cheapest inter-pod
+    traffic: one gradient all-reduce per step);
+  * weights 2D-sharded: "model" = tensor parallel (heads / d_ff / experts /
+    vocab), "data" = FSDP (ZeRO-3 style parameter+optimizer sharding,
+    re-gathered per layer inside the scan);
+  * elastic: any (data, model) shape works — checkpoints are mesh-agnostic
+    and restore reshards (checkpoint/ckpt.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic variant: any shape whose product <= len(jax.devices())."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The axes a batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_divisor(mesh) -> int:
+    d = 1
+    for a in data_axes(mesh):
+        d *= mesh.shape[a]
+    return d

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede jax init (same contract as dryrun.py)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, RunConfig, get_arch
+from repro.launch import shardings as sh
+from repro.launch.dryrun import COMPUTE_DTYPE, layer_variants
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, cache_specs, input_specs
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_row
+
+"""§Perf hillclimbing harness: run one (arch x shape) cell under a NAMED
+VARIANT (config patch + build options + sharding overrides), record the
+same depth-scaled roofline terms as the dry-run, append to perf.jsonl.
+
+Variants are defined in VARIANTS below — each entry is one
+hypothesis->change iteration documented in EXPERIMENTS.md §Perf.
+"""
+
+
+def build(arch, shape_name, *, cfg_patch=None, last_only=False,
+          sharding_overrides=None, cfg_base=None, naive_tp=True,
+          cache_batch_only=False):
+    cfg = cfg_base or get_arch(arch)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    model = build_model(cfg)
+
+    if sharding_overrides:
+        sh.PARAM_OVERRIDES.update(sharding_overrides)
+    try:
+        if shape.kind == "train":
+            from repro.optim.adamw import AdamWState
+            from repro.train.step import TrainState, make_train_step
+
+            step = make_train_step(model, RunConfig())
+            pspecs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0), COMPUTE_DTYPE))
+            f32like = lambda t: jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+            state_like = TrainState(
+                params=pspecs,
+                opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                               mu=f32like(pspecs), nu=f32like(pspecs)),
+                step=jax.ShapeDtypeStruct((), jnp.int32), ef=None)
+            batch_like = input_specs(cfg, shape, COMPUTE_DTYPE)
+            st_sh = sh.state_shardings(mesh, state_like, cfg, naive_tp)
+            b_sh = sh.batch_shardings(mesh, batch_like)
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None))
+            args = (state_like, batch_like)
+        elif shape.kind == "prefill":
+            pspecs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0), COMPUTE_DTYPE))
+            batch_like = input_specs(cfg, shape, COMPUTE_DTYPE)
+            p_sh = sh.param_shardings(mesh, pspecs, cfg, naive_tp)
+            b_sh = sh.batch_shardings(mesh, batch_like)
+            fwd = lambda params, batch: model.forward(params, batch,
+                                                      last_only=last_only)
+            jitted = jax.jit(fwd, in_shardings=(p_sh, b_sh),
+                             out_shardings=None)
+            args = (pspecs, batch_like)
+        else:
+            pspecs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0), COMPUTE_DTYPE))
+            cspecs = cache_specs(cfg, shape, COMPUTE_DTYPE)
+            batch_like = input_specs(cfg, shape, COMPUTE_DTYPE)
+            p_sh = sh.param_shardings(mesh, pspecs, cfg, naive_tp)
+            c_sh = sh.cache_shardings(mesh, cspecs, shape.global_batch,
+                                      features=not cache_batch_only)
+            b_sh = sh.batch_shardings(mesh, batch_like)
+
+            def serve_step(params, caches, batch):
+                return model.decode_step(params, caches, batch["tokens"])
+
+            jitted = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                             out_shardings=(None, c_sh))
+            args = (pspecs, cspecs, batch_like)
+    finally:
+        pass
+    return cfg, shape, mesh, jitted, args
+
+
+def compile_costs(arch, shape_name, **kw):
+    t0 = time.perf_counter()
+    cfg, shape, mesh, jitted, args = build(arch, shape_name, **kw)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    return cfg, shape, mesh, {
+        "compile_s": round(time.perf_counter() - t0, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": collective_bytes_from_hlo(hlo),
+        "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+        "peak_bytes_per_device": int(mem.peak_memory_in_bytes),
+    }, hlo
+
+
+def run_variant(arch, shape_name, variant_name, hlo_dir=None, **kw):
+    """Full depth-scaled roofline for one variant of one cell."""
+    cfg, shape, mesh, full, hlo = compile_costs(arch, shape_name, **kw)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(
+                hlo_dir, f"{arch}_{shape_name}_{variant_name}.hlo"),
+                "w") as f:
+            f.write(hlo)
+    cfg_a, ua, cfg_b, ub, n_units = layer_variants(cfg)
+    patch_a = {f.name: getattr(cfg_a, f.name)
+               for f in dataclasses.fields(cfg_a)}
+    patch_b = {f.name: getattr(cfg_b, f.name)
+               for f in dataclasses.fields(cfg_b)}
+    kw_a = dict(kw, cfg_patch=None, cfg_base=cfg_a)
+    kw_b = dict(kw, cfg_patch=None, cfg_base=cfg_b)
+    _, _, _, ca, _ = compile_costs(arch, shape_name, **kw_a)
+    _, _, _, cb, _ = compile_costs(arch, shape_name, **kw_b)
+    row = {"arch": arch, "shape": shape_name, "variant": variant_name,
+           "mesh": "16x16", "kind": shape.kind, "n_chips": 256,
+           "status": "ok"}
+    row.update(full)
+    for k in ("flops", "bytes_accessed", "collective_bytes"):
+        per_unit = (cb[k] - ca[k]) / (ub - ua)
+        fixed = ca[k] - ua * per_unit
+        row[k + "_scaled"] = max(fixed + n_units * per_unit, row[k])
+    scaled = {**row, "flops": row["flops_scaled"],
+              "bytes_accessed": row["bytes_accessed_scaled"],
+              "collective_bytes": row["collective_bytes_scaled"]}
+    row.update(roofline_row(cfg, shape, scaled))
+    return row
+
+
+# ---------------------------------------------------------------------------
+# the named variants (EXPERIMENTS.md §Perf iterations)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # ---- cell C: qwen2.5-32b x prefill_32k --------------------------------
+    ("qwen2.5-32b", "prefill_32k"): {
+        "baseline": {},
+        "last_only": dict(last_only=True),
+        "blocked_attn": dict(last_only=True,
+                             cfg_patch=dict(attn_q_chunk=2048)),
+        "blocked_attn_4k": dict(last_only=True,
+                                cfg_patch=dict(attn_q_chunk=4096)),
+        "tp_headfix": dict(last_only=True,
+                           cfg_patch=dict(attn_q_chunk=2048),
+                           naive_tp=False),
+        # zero-pad q heads 40->48 (numerics-exact: padded heads hit zero
+        # wo rows) so wq/wo TP-shard on head boundaries again
+        "qpad48": dict(last_only=True,
+                       cfg_patch=dict(attn_q_chunk=2048, n_heads=48),
+                       naive_tp=False),
+        "bf16_pv": dict(last_only=True,
+                        cfg_patch=dict(attn_q_chunk=2048, n_heads=48,
+                                       attn_w_bf16=True),
+                        naive_tp=False),
+    },
+    # ---- cell A: mamba2-780m x train_4k ------------------------------------
+    ("mamba2-780m", "train_4k"): {
+        "baseline": {},
+        "chunk128": dict(cfg_patch=dict(ssm_chunk=128)),
+        "chunk512": dict(cfg_patch=dict(ssm_chunk=512)),
+        "inproj_fsdp_only": dict(sharding_overrides={
+            "in_proj": "fsdp_in"}),
+        "chunk128_inproj": dict(cfg_patch=dict(ssm_chunk=128),
+                                sharding_overrides={"in_proj": "fsdp_in"}),
+        "tp_headfix": dict(naive_tp=False),
+        "headfix_inproj": dict(naive_tp=False,
+                               sharding_overrides={"in_proj": "fsdp_in"}),
+        "headfix_inproj_c128": dict(naive_tp=False,
+                                    cfg_patch=dict(ssm_chunk=128),
+                                    sharding_overrides={"in_proj": "fsdp_in"}),
+        "inproj_bf16ssd": dict(
+            cfg_patch=dict(ssd_bf16=True),
+            sharding_overrides={"in_proj": "fsdp_in"}),
+        "headfix_inproj_ssdheads": dict(
+            naive_tp=False,
+            cfg_patch=dict(ssd_shard_heads=True),
+            sharding_overrides={"in_proj": "fsdp_in"}),
+    },
+    # ---- cell B: recurrentgemma-2b x decode_32k ----------------------------
+    ("recurrentgemma-2b", "decode_32k"): {
+        "baseline": {},
+        "replicate_attn": dict(sharding_overrides={
+            "wq": "replicate", "wk": "replicate", "wv": "replicate",
+            "wo": "replicate"}),
+        "lru_fsdp_only": dict(sharding_overrides={
+            "w_a": "fsdp_in", "w_i": "fsdp_in"}),
+        "tp_headfix": dict(naive_tp=False),
+        "headfix_repl_attn": dict(naive_tp=False, sharding_overrides={
+            "wq": "replicate", "wk": "replicate", "wv": "replicate",
+            "wo": "replicate"}),
+        "headfix_cache_batch": dict(naive_tp=False, cache_batch_only=True),
+    },
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default="benchmarks/results/perf.jsonl")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+    spec = VARIANTS[(args.arch, args.shape)][args.variant]
+    row = run_variant(args.arch, args.shape, args.variant,
+                      hlo_dir=args.hlo_dir, **spec)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    print(json.dumps({k: row[k] for k in
+                      ("variant", "compute_s", "memory_s", "collective_s",
+                       "dominant", "roofline_fraction",
+                       "peak_bytes_per_device", "compile_s")}))
+
+
+if __name__ == "__main__":
+    main()

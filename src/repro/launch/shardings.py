@@ -1,0 +1,259 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for any mesh.
+
+Discipline (DESIGN.md §6):
+  * batch dims -> ("pod", "data") (pure DP across pods);
+  * 2-D weight matrices -> P(fsdp_axis, "model"): tensor parallel on the
+    output features, FSDP (ZeRO-3) on the input features — XLA re-gathers
+    per layer inside the depth scan, so peak memory is one layer's weights;
+  * embeddings -> vocab on "model" (padded % 256), d_model on FSDP axis;
+  * MoE experts -> expert dim on "model" (EP), features FSDP;
+  * every rule checks divisibility against the actual mesh and falls back
+    (drop the FSDP axis first, then TP) — the "resource-ratio-driven
+    design" discipline of the paper's §III.E applied to mesh resources:
+    never force a shard the substrate can't honor.
+
+Works by walking the pytree with key paths; scan-stacked blocks carry a
+leading layer axis that is never sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes
+
+# leaf-name classification
+_EMBED = {"embedding"}
+_UNEMBED = {"unembed"}
+_SCALARISH = {"scale", "bias", "b_a", "b_i", "lam", "a_log", "d_skip",
+              "dt_bias", "conv_b", "bq", "bk", "bv"}
+_CONV = {"conv_w"}
+_EXPERT_PARENT = "experts"
+# attention projections: TP only when the HEAD COUNT divides the model
+# axis — a flat-feature shard that cuts inside head_dim puts the scores
+# einsum's contraction on a sharded dim and XLA all-reduces S^2 score
+# tiles (hundreds of GiB/step at 32k). Head-boundary-aware rules are the
+# beyond-paper default; ``naive_tp=True`` restores the naive baseline.
+_ATTN_Q = {"wq"}
+_ATTN_KV = {"wk", "wv"}
+# second matmuls: row-parallel (contraction sharded, one activation psum)
+# so their input sharding matches the first matmul's output sharding
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "w_out"}
+
+
+def _axis_ok(mesh: Mesh, axis: str, dim: int) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def _fsdp_axis(mesh: Mesh) -> str | None:
+    return "data" if "data" in mesh.shape else None
+
+
+def _matrix_spec(mesh: Mesh, shape, prefix_none: int, *, under_experts: bool):
+    """2D (d_in, d_out) weight (possibly stacked): TP on d_out, FSDP d_in."""
+    d_in, d_out = shape[-2], shape[-1]
+    fsdp = _fsdp_axis(mesh)
+    tp_out = _axis_ok(mesh, "model", d_out) and not under_experts
+    fs_in = fsdp is not None and _axis_ok(mesh, fsdp, d_in)
+    # avoid TP+FSDP on the same tiny matrix if either dim is small
+    spec_in = fsdp if fs_in else None
+    spec_out = "model" if tp_out else None
+    if not tp_out and fsdp is not None and _axis_ok(mesh, fsdp, d_out):
+        # TP impossible: at least FSDP the larger dim
+        if not fs_in:
+            spec_out = fsdp
+    return P(*([None] * prefix_none + [spec_in, spec_out]))
+
+
+# perf-experiment hooks: leaf-name -> policy ("replicate" | "fsdp_in")
+PARAM_OVERRIDES: dict[str, str] = {}
+
+
+def param_spec(mesh: Mesh, path: str, shape, cfg=None,
+               naive_tp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf addressed by its tree path."""
+    parts = path.split("/")
+    name = parts[-1]
+    ndim = len(shape)
+    under_experts = _EXPERT_PARENT in parts
+    if name in PARAM_OVERRIDES:
+        policy = PARAM_OVERRIDES[name]
+        if policy == "replicate":
+            return P()
+        if policy == "fsdp_in" and ndim >= 2:
+            fsdp = _fsdp_axis(mesh)
+            ok = fsdp is not None and _axis_ok(mesh, fsdp, shape[-2])
+            return P(*([None] * (ndim - 2) + [fsdp if ok else None, None]))
+    if not naive_tp and cfg is not None and ndim >= 2 \
+            and not under_experts \
+            and name in (_ATTN_Q | _ATTN_KV | _ROW_PARALLEL):
+        fsdp = _fsdp_axis(mesh)
+        m = mesh.shape.get("model", 1)
+        heads_ok = {"wq": cfg.n_heads % m == 0,
+                    "wk": cfg.n_kv_heads % m == 0,
+                    "wv": cfg.n_kv_heads % m == 0,
+                    "wo": cfg.n_heads % m == 0,
+                    "w_down": shape[-2] % m == 0,
+                    "out_proj": shape[-2] % m == 0,
+                    "w_out": shape[-2] % m == 0}[name]
+        fs_in = fsdp is not None and _axis_ok(mesh, fsdp, shape[-2])
+        fs_out = fsdp is not None and _axis_ok(mesh, fsdp, shape[-1])
+        prefix = [None] * (ndim - 2)
+        if name in _ROW_PARALLEL:
+            # contraction sharded; one activation psum per layer
+            return P(*(prefix + ["model" if heads_ok else (fsdp if fs_in else None),
+                                 fsdp if (heads_ok and fs_out) else None]))
+        return P(*(prefix + [fsdp if fs_in else None,
+                             "model" if heads_ok else None]))
+    # how many leading stacking axes (scan layers, expert dim handled below)
+    if name in _SCALARISH or ndim <= 1:
+        return P()
+    if name in _CONV:
+        return P()  # (K, C) small depthwise filters: replicate
+    if name in _EMBED:
+        # (V, D) -> vocab on model, d FSDP
+        fsdp = _fsdp_axis(mesh)
+        v_ok = _axis_ok(mesh, "model", shape[0])
+        d_ok = fsdp is not None and _axis_ok(mesh, fsdp, shape[1])
+        return P("model" if v_ok else None, fsdp if d_ok else None)
+    if name in _UNEMBED:
+        prefix = ndim - 2
+        fsdp = _fsdp_axis(mesh)
+        d_ok = fsdp is not None and _axis_ok(mesh, fsdp, shape[-2])
+        v_ok = _axis_ok(mesh, "model", shape[-1])
+        return P(*([None] * prefix
+                   + [fsdp if d_ok else None, "model" if v_ok else None]))
+    if under_experts and ndim >= 3:
+        # (L, E, d_in, d_out) or (E, d_in, d_out): experts on model (EP)
+        e_axis = ndim - 3
+        e_ok = _axis_ok(mesh, "model", shape[e_axis])
+        fsdp = _fsdp_axis(mesh)
+        fs_in = fsdp is not None and _axis_ok(mesh, fsdp, shape[-2])
+        spec = [None] * ndim
+        if e_ok:
+            spec[e_axis] = "model"
+        if fs_in:
+            spec[-2] = fsdp
+        return P(*spec)
+    if ndim >= 2:
+        return _matrix_spec(mesh, shape, ndim - 2,
+                            under_experts=under_experts)
+    return P()
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(f"[{p.idx}]")
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out, treedef
+
+
+def param_shardings(mesh: Mesh, params_like, cfg=None,
+                    naive_tp: bool = False) -> Any:
+    """NamedSharding tree matching ``params_like`` (arrays or SDS)."""
+    flat, treedef = _tree_paths(params_like)
+    shardings = [NamedSharding(mesh, param_spec(mesh, path, leaf.shape,
+                                                cfg=cfg, naive_tp=naive_tp))
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Shard a leading batch dim over as many data axes as divide it."""
+    axes = [a for a in data_axes(mesh)]
+    use: list[str] = []
+    div = 1
+    for a in axes:
+        if batch_size % (div * mesh.shape[a]) == 0:
+            use.append(a)
+            div *= mesh.shape[a]
+    if not use:
+        return P()
+    return P(tuple(use) if len(use) > 1 else use[0])
+
+
+def batch_shardings(mesh: Mesh, batch_like) -> Any:
+    flat, treedef = _tree_paths(batch_like)
+    out = []
+    for _, leaf in flat:
+        if leaf.ndim == 0:
+            out.append(NamedSharding(mesh, P()))
+        else:
+            bs = batch_spec(mesh, leaf.shape[0])
+            out.append(NamedSharding(
+                mesh, P(*(list(bs) + [None] * (leaf.ndim - len(bs))))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_spec(mesh: Mesh, shape, batch_size: int,
+               features: bool = True) -> P:
+    """Spec for one decode-cache leaf: batch axis (exact size match in the
+    first two axes — layer-stacked entries are (L, B, ...), plain ones
+    (B, ...)) shards over the data axes. KV/state caches additionally shard
+    a feature axis on "model": a 32k-context KV cache is hundreds of GB and
+    MUST split beyond batch (heads if divisible, else the capacity axis —
+    decode attention over a length-sharded cache costs one small stats
+    combine)."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    bs = batch_spec(mesh, batch_size)
+    batch_ax = None
+    if ndim and len(bs):
+        for ax in range(min(2, ndim)):
+            if shape[ax] == batch_size:
+                spec[ax] = bs[0] if len(bs) == 1 else tuple(bs)
+                batch_ax = ax
+                break
+    if features and ndim >= 3 and "model" in mesh.shape:
+        m = mesh.shape["model"]
+        # candidate feature axes, preferred order: heads (-2), then
+        # capacity/state (-3), then trailing feature (-1)
+        for ax in (ndim - 2, ndim - 3, ndim - 1):
+            if ax <= (batch_ax if batch_ax is not None else 0):
+                continue
+            if spec[ax] is None and shape[ax] % m == 0 and shape[ax] >= m:
+                spec[ax] = "model"
+                break
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, cache_like, batch_size: int,
+                    features: bool = True) -> Any:
+    flat, treedef = _tree_paths(cache_like)
+    out = [NamedSharding(mesh, cache_spec(mesh, leaf.shape, batch_size,
+                                          features))
+           for _, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(mesh: Mesh, state_like, cfg=None,
+                    naive_tp: bool = False):
+    """TrainState: params/mu/nu share param specs; counters replicated."""
+    from ..train.step import TrainState
+
+    p_sh = param_shardings(mesh, state_like.params, cfg, naive_tp)
+    mu_sh = param_shardings(mesh, state_like.opt.mu, cfg, naive_tp)
+    nu_sh = param_shardings(mesh, state_like.opt.nu, cfg, naive_tp)
+    rep = NamedSharding(mesh, P())
+    from ..optim.adamw import AdamWState
+
+    ef = (None if state_like.ef is None
+          else param_shardings(mesh, state_like.ef, cfg, naive_tp))
+    return TrainState(params=p_sh,
+                      opt=AdamWState(step=rep, mu=mu_sh, nu=nu_sh),
+                      step=rep, ef=ef)

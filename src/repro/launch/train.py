@@ -1,0 +1,75 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced configs end-to-end (data pipeline ->
+sharded train step -> checkpoints -> metrics). On a TPU pod the same
+driver runs the full config: the mesh/sharding layer is identical — only
+``--devices`` changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, RunConfig, get_arch
+from repro.data import PipelineSpec
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.train import make_train_step, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="1x1",
+                    help="dataxmodel, e.g. 16x16 on a pod")
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    rc = RunConfig(learning_rate=args.lr, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=args.ckpt_every, warmup_steps=10,
+                   async_ckpt=True)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    spec = PipelineSpec(vocab=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch, seed=rc.seed)
+
+    if d * m > 1:
+        mesh = make_mesh((d, m), ("data", "model"))
+        with mesh:
+            step = make_train_step(model, rc, args.steps)
+            from repro.train.step import TrainState, init_state
+            state0 = jax.eval_shape(
+                lambda: init_state(model, jax.random.PRNGKey(rc.seed), rc))
+            st_sh = sh.state_shardings(mesh, state0)
+            step_fn = jax.jit(step, in_shardings=(st_sh, None),
+                              out_shardings=(st_sh, None))
+            res = train_loop(model, cfg, rc, spec, args.steps,
+                             step_fn=step_fn, log_path=args.log)
+    else:
+        res = train_loop(model, cfg, rc, spec, args.steps, log_path=args.log)
+    print(json.dumps({
+        "arch": cfg.name, "steps": len(res.losses),
+        "resumed_from": res.resumed_from,
+        "first_loss": res.losses[0] if res.losses else None,
+        "last_loss": res.losses[-1] if res.losses else None,
+        "stragglers": res.straggler_steps,
+    }))
+
+
+if __name__ == "__main__":
+    main()

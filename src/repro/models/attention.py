@@ -1,0 +1,182 @@
+"""Attention: GQA/MQA/MHA, causal + local-window masks, KV-cache decode.
+
+GQA grouped einsum (no materialized KV-head replication): q heads are
+reshaped (G kv groups x R reps). Softmax in f32. The decode path addresses
+a fixed-capacity cache with dynamic_update_slice (rolling for windowed
+attention, so RG-LRU-style hybrids keep O(window) state at 500k context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def attn_params(key, d_model, n_heads, n_kv_heads, head_dim, dtype,
+                qkv_bias=False, d_kv_model=None):
+    d_kv_model = d_kv_model or d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_kv_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_kv_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_cap, KVH, D)
+    v: jax.Array        # (B, S_cap, KVH, D)
+    # for windowed attention the cache is a ring buffer of size window
+
+
+def _project_qkv(p, x, x_kv, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    Skv = x_kv.shape[1]
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, Skv, n_kv_heads, head_dim),
+            v.reshape(B, Skv, n_kv_heads, head_dim))
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,D), k: (B,T,G,D) -> scores (B,G,R,S,T)."""
+    B, S, H, D = q.shape
+    G = k.shape[2]
+    R = H // G
+    qg = q.reshape(B, S, G, R, D)
+    return jnp.einsum("bsgrd,btgd->bgrst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) / np.sqrt(D)
+
+
+def _gqa_out(weights, v, out_dtype):
+    """weights: (B,G,R,S,T), v: (B,T,G,D) -> (B,S,H*D)."""
+    B, G, R, S, T = weights.shape
+    D = v.shape[-1]
+    o = jnp.einsum("bgrst,btgd->bsgrd", weights, v.astype(jnp.float32))
+    return o.reshape(B, S, G * R * D).astype(out_dtype)
+
+
+def attention(p, x, positions, cfg, *, x_kv=None, causal=True,
+              window: int = 0, rope: bool = True):
+    """Full (prefill/train) attention. x: (B,S,D).
+
+    When ``cfg.attn_q_chunk`` is set (and applicable) the score computation
+    is q-chunk-blocked with STATIC causal/banded key ranges — the S^2 score
+    tensor is never materialized whole, and banded (windowed) attention
+    skips out-of-window key blocks entirely. This is the beyond-paper
+    §Perf optimization; the un-blocked path is the paper-faithful baseline.
+    """
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, x_kv, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    S = q.shape[1]
+    qc = getattr(cfg, "attn_q_chunk", 0)
+    if causal and qc and S > qc and S % qc == 0 and x_kv is x:
+        out = _blocked_causal(q, k, v, qc, window, x.dtype,
+                              getattr(cfg, "attn_w_bf16", False))
+        return out @ p["wo"], (k, v)
+    scores = _gqa_scores(q, k)                       # (B,G,R,S,T)
+    S, T = scores.shape[-2], scores.shape[-1]
+    if causal:
+        i = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(w, v, x.dtype)
+    return out @ p["wo"], (k, v)
+
+
+def _blocked_causal(q, k, v, chunk: int, window: int, out_dtype,
+                    w_bf16: bool = False):
+    """Causal (optionally banded) attention, q-chunked with static key
+    slices. Peak score tile: (B,G,R,chunk,kmax) instead of (...,S,S);
+    windowed attention touches only ceil((window+chunk)/chunk) key blocks
+    per q block — O(S*window) work instead of O(S^2)."""
+    B, S, H, D = q.shape
+    outs = []
+    for ci in range(S // chunk):
+        q_lo, q_hi = ci * chunk, (ci + 1) * chunk
+        k_lo = 0
+        if window:
+            k_lo = max(0, q_hi - window - chunk)
+            k_lo = (k_lo // chunk) * chunk           # static, block-aligned
+        k_hi = q_hi
+        qs = q[:, q_lo:q_hi]
+        ks = k[:, k_lo:k_hi]
+        vs = v[:, k_lo:k_hi]
+        scores = _gqa_scores(qs, ks)                 # (B,G,R,chunk,k_hi-k_lo)
+        i = jax.lax.broadcasted_iota(jnp.int32, (chunk, k_hi - k_lo), 0) \
+            + q_lo
+        j = jax.lax.broadcasted_iota(jnp.int32, (chunk, k_hi - k_lo), 1) \
+            + k_lo
+        mask = j <= i
+        if window:
+            mask &= j > i - window
+        scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        if w_bf16:
+            w = w.astype(jnp.bfloat16)
+        outs.append(_gqa_out(w, vs, out_dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def init_cache(batch, capacity, n_kv_heads, head_dim, dtype) -> KVCache:
+    z = jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype)
+    return KVCache(k=z, v=z)
+
+
+def decode_attention(p, x, pos, cache: KVCache, cfg, *, window: int = 0,
+                     rope: bool = True):
+    """One-token decode. x: (B,1,D); pos: scalar int32 or (B,) vector (the
+    serving engine's slots sit at different positions — the flexible-mask
+    batching of DESIGN.md §5).
+
+    The cache has fixed capacity C (= seq_len, or window for local
+    attention, where it is addressed as a ring buffer).
+    """
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k, v = _project_qkv(p, x, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    if rope:
+        q = apply_rope(q, pos_v[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos_v[:, None], cfg.rope_theta)
+    slot = jnp.where(window > 0, pos_v % jnp.maximum(C, 1), pos_v)
+    rows = jnp.arange(B)
+    newk = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+    newv = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+    scores = _gqa_scores(q, newk)                    # (B,G,R,1,C)
+    idx = jnp.arange(C)[None, :]
+    if window > 0:
+        valid = (idx <= slot[:, None]) | (pos_v[:, None] >= C)  # ring full
+    else:
+        valid = idx <= pos_v[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(w, newv, x.dtype)
+    return out @ p["wo"], KVCache(k=newk, v=newv)

@@ -1,0 +1,134 @@
+"""Shared neural-net layers (pure JAX, param dicts, dtype-polymorphic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return truncated_normal(key, (d_in, d_out), scale, dtype)
+
+
+def rmsnorm_params(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d_model, d_ff, activation, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d_model, d_ff, dtype),
+                "w_up": dense_init(k2, d_model, d_ff, dtype),
+                "w_down": dense_init(k3, d_ff, d_model, dtype)}
+    return {"w_up": dense_init(k1, d_model, d_ff, dtype),
+            "w_down": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def mlp(p, x, activation):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_params(key, vocab, d_model, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": truncated_normal(k1, (vocab, d_model), 0.02, dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, d_model, vocab, dtype)
+    return p
+
+
+def embed(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p, x, soft_cap: float = 0.0):
+    if "unembed" in p:
+        logits = x @ p["unembed"]
+    else:
+        logits = x @ p["embedding"].T.astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if soft_cap > 0.0:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, D); positions: (B, S) or (S,)"""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)   # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B,S,d/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (B,S,1,d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, ignore: int = -100):
+    """Mean CE over non-ignored positions; logits f32 (B,S,V), labels (B,S)."""
+    mask = labels != ignore
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-slot dispatch.
+
+Dispatch is INDEX-based (gather/scatter), not the one-hot einsum form: the
+(tokens x experts x capacity) dispatch tensor is O(T^2) and breaks at
+32k-sequence prefill; index dispatch is O(E*C*d) = O(T*k*cf*d) — linear.
+
+  1. top-k routing probabilities per token (renormalized over the k picks);
+  2. in-expert slot positions via a priority-ordered cumulative count
+     (all first choices, then second choices, ... — GShard order);
+  3. slot table (E, C) <- token index (unique, collision-free scatter);
+  4. expert FFNs run on gathered (E, C, d) tiles — vmapped over the expert
+     axis, shardable with experts on the "model" mesh axis (EP);
+  5. outputs gathered back per (token, choice) and combined with gates.
+
+Tokens overflowing capacity are dropped (combine weight zero) — standard
+at capacity_factor ~1.25. Shared experts (DeepSeekMoE) are dense FFNs
+added unconditionally. Returns the Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, mlp, mlp_params
+
+
+def moe_params(key, cfg, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    E = cfg.n_experts
+    ekeys = jax.random.split(ke, E)
+    experts = jax.vmap(
+        lambda k: mlp_params(k, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    )(ekeys)
+    p = {"router": dense_init(kr, cfg.d_model, E, dtype, scale=0.02),
+         "experts": experts}
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(ks, cfg.d_model,
+                                 cfg.d_ff * cfg.n_shared_experts,
+                                 cfg.activation, dtype)
+    return p
+
+
+def route_topk(logits, k: int, capacity: int):
+    """logits: (T, E) -> routing plan.
+
+    Returns dict with:
+      expert (T, k) int32, slot (T, k) int32, keep (T, k) bool,
+      gate (T, k) f32 (renormalized), slot_token (E, C) int32 (-1 = empty),
+      aux scalar.
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                    # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(expert, E, dtype=jnp.float32)     # (T, k, E)
+    # priority order: all 1st choices first, then 2nd, ... (GShard)
+    flat = onehot.transpose(1, 0, 2).reshape(k * T, E)
+    pos = (jnp.cumsum(flat, axis=0) - flat)                   # (kT, E)
+    pos = pos.reshape(k, T, E).transpose(1, 0, 2)
+    slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)   # (T, k)
+    keep = slot < capacity
+    # slot table: (E, C) <- token index (unique slots: collision-free)
+    tok_ids = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                               (T, k))
+    e_safe = jnp.where(keep, expert, 0)
+    s_safe = jnp.where(keep, slot, capacity)                  # drop lane
+    slot_token = jnp.full((E, capacity + 1), -1, jnp.int32)
+    slot_token = slot_token.at[e_safe.reshape(-1),
+                               s_safe.reshape(-1)].set(
+        jnp.where(keep, tok_ids, -1).reshape(-1), mode="drop")
+    slot_token = slot_token[:, :capacity]
+    # Switch aux loss: E * sum_e fraction_routed_e * mean_prob_e
+    f = onehot.sum(axis=1).mean(axis=0)
+    aux = E * jnp.sum(f * probs.mean(axis=0))
+    return {"expert": expert, "slot": slot, "keep": keep, "gate": gate,
+            "slot_token": slot_token, "aux": aux}
+
+
+def moe_layer(p, cfg, x):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    capacity = int(np.ceil(T / E * cfg.capacity_factor * k))
+    xt = x.reshape(T, d)
+    plan = route_topk(xt @ p["router"], k, capacity)
+    # gather tokens into expert tiles: (E, C, d); empty slots read row 0
+    # and are masked after
+    st = plan["slot_token"]                                   # (E, C)
+    xe = xt[jnp.maximum(st, 0)]                               # (E, C, d)
+    xe = jnp.where((st >= 0)[..., None], xe, 0).astype(x.dtype)
+    ye = jax.vmap(lambda pp, xx: mlp(pp, xx, cfg.activation))(
+        p["experts"], xe)                                     # (E, C, d)
+    # gather back per (token, choice) and combine with gates
+    e_safe = jnp.where(plan["keep"], plan["expert"], 0)
+    s_safe = jnp.where(plan["keep"], plan["slot"], 0)
+    yt = ye[e_safe, s_safe]                                   # (T, k, d)
+    w = (plan["gate"] * plan["keep"]).astype(jnp.float32)
+    y = jnp.einsum("tkd,tk->td", yt.astype(jnp.float32), w)
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg.activation)
+    return y, plan["aux"]

@@ -1,0 +1,61 @@
+"""Model + input-spec registry: config -> model instance -> batch specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .transformer import LM
+from .whisper import EncDec
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return EncDec(cfg)
+    return LM(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a given cell —
+    weak-type-correct, shardable, no device allocation.
+
+    train/prefill: the full-sequence batch. decode: one new token (the KV
+    cache / recurrent state is a separate input built by ``cache_specs``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    if shape.kind == "decode":
+        batch = {"tokens": tok(B, 1)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dtype)
+        return batch
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq,
+                                                cfg.d_model), dtype),
+                "tokens": tok(B, S), "labels": tok(B, S)}
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_image_tokens
+        return {"tokens": tok(B, s_text),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.d_model), dtype),
+                "labels": tok(B, s_text)}
+    batch = {"tokens": tok(B, S)}
+    if shape.kind == "train":
+        batch["labels"] = tok(B, S)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode caches for a cell (via eval_shape)."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_decode_caches(shape.global_batch, shape.seq_len,
+                                         dtype))
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype))

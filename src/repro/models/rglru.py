@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the diagonal linear recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); decode is a single
+fused step carrying (conv_state, h). The surrounding block is Griffin's
+recurrent block: two input branches, a width-4 causal conv on the
+recurrent branch, GeLU gating on the other, and an output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, truncated_normal
+
+_C = 8.0
+
+
+def rglru_params(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "w_x": dense_init(ks[1], d, w, dtype),       # recurrent branch
+        "w_y": dense_init(ks[2], d, w, dtype),       # gate branch
+        "conv_w": truncated_normal(ks[3], (4, w), 0.5, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[4], w, w, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[5], w, w, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(ks[6], w, d, dtype),
+    }
+
+
+def _conv(p, u, state=None):
+    K = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    idx = jnp.arange(u.shape[1])[:, None] + jnp.arange(K)[None, :]
+    win = full[:, idx, :]
+    y = jnp.einsum("blkc,kc->blc", win, p["conv_w"].astype(u.dtype))
+    return y + p["conv_b"].astype(u.dtype), full[:, -(K - 1):, :]
+
+
+def _gates(p, x):
+    """x: (..., w) -> (log_a, gated_input) in f32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x32 @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * x32)
+
+
+def rglru(p, x, h0=None):
+    """x: (B, L, w). Returns (y, h_last). Associative scan over time."""
+    a, bx = _gates(p, x)                       # (B,L,w) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold carried state into the first step: h_1 = a_1 h0 + b_1
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x, h):
+    """Single decode step. x: (B, 1, w); h: (B, w) f32."""
+    a, bx = _gates(p, x)
+    hn = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return hn[:, None, :].astype(x.dtype), hn
+
+
+def recurrent_block(p, x, *, conv_state=None, h_state=None, decode=False):
+    """Griffin recurrent block. x: (B, L, d). Returns (y, (conv, h))."""
+    branch = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_y"])
+    conv_out, new_conv = _conv(p, branch, conv_state if decode else None)
+    if decode:
+        h, new_h = rglru_step(p, conv_out, h_state)
+    else:
+        h, new_h = rglru(p, conv_out, h0=h_state)
+    return (h * gate) @ p["w_out"], (new_conv, new_h)

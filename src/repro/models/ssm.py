@@ -1,0 +1,178 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: within chunks of Q tokens the recurrence is
+evaluated as (masked) matmuls — MXU food — and a `lax.scan` carries the
+(H, P, N) recurrent state across chunks, so training/prefill are linear in
+sequence length and decode carries O(H*P*N) state (this is why mamba2 runs
+the 500k-context cell that full-attention archs must skip).
+
+Block = in_proj -> short conv (x,B,C) -> SSD -> gated RMSNorm -> out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm, rmsnorm_params, truncated_normal
+
+
+def ssd_params(key, cfg, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    P = cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * di + 2 * G * N + H
+    conv_dim = di + 2 * G * N
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": truncated_normal(ks[1], (cfg.conv_kernel, conv_dim),
+                                   1.0 / np.sqrt(cfg.conv_kernel), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1))))),
+        "norm": rmsnorm_params(di, dtype),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _conv(p, u, state=None):
+    """Causal depthwise short conv. u: (B, L, C). Returns (y, new_state)."""
+    K = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)               # (B, L+K-1, C)
+    idx = jnp.arange(u.shape[1])[:, None] + jnp.arange(K)[None, :]
+    win = full[:, idx, :]                                   # (B, L, K, C)
+    y = jnp.einsum("blkc,kc->blc", win, p["conv_w"].astype(u.dtype))
+    y = y + p["conv_b"].astype(u.dtype)
+    return jax.nn.silu(y), full[:, -(K - 1):, :] if K > 1 else None
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    return jnp.where(j <= i, seg, -jnp.inf)
+
+
+def ssd_scan(cfg, x, dt, B, C, a_log, init_state=None):
+    """Chunked SSD. x: (b,L,H,P); dt: (b,L,H) (post-softplus);
+    B, C: (b,L,G,N). Returns (y (b,L,H,P), final_state (b,H,P,N))."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    rep = H // G
+    A = -jnp.exp(a_log)                                    # (H,)
+
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(b, nc, Q, H, P)
+    dtc = dt.astype(f32).reshape(b, nc, Q, H)
+    Bc = B.astype(f32).reshape(b, nc, Q, G, N)
+    Cc = C.astype(f32).reshape(b, nc, Q, G, N)
+    dA = dtc * A[None, None, None, :]                      # (b,nc,Q,H)
+
+    # intra-chunk (diagonal block): decay matrix per head
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (b,nc,H,Q,Q)
+    CB = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)          # (b,nc,G,Q,S)
+    CB = jnp.repeat(CB, rep, axis=2)                       # (b,nc,H,Q,S)
+    dtx = dtc[..., None] * xc                              # dt-weighted input
+    if getattr(cfg, "ssd_bf16", False):
+        # bf16 operands, f32 accumulation: halves the Q^2-tile traffic
+        bf = jnp.bfloat16
+        y_diag = jnp.einsum("bchqs,bcshp->bcqhp",
+                            (CB * Lmat).astype(bf), dtx.astype(bf),
+                            preferred_element_type=f32)
+    else:
+        y_diag = jnp.einsum("bchqs,bcshp->bcqhp", CB * Lmat, dtx)
+
+    # per-chunk input -> state contribution:
+    #   sum_q exp(sum_{s>q} dA_s) * dt_q B_q x_q
+    total = jnp.sum(dA, axis=2, keepdims=True)             # (b,nc,1,H)
+    decay_states = jnp.exp(total - jnp.cumsum(dA, axis=2))  # (b,nc,Q,H)
+    Brep = jnp.repeat(Bc, rep, axis=3) if rep > 1 else Bc   # (b,nc,Q,H,N)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Brep, decay_states, dtx)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))             # (b,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                      # (b,H,P,N), (b,H)
+        h = h * dec[..., None, None] + st
+        return h, h
+
+    h0 = (jnp.zeros((b, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+    hT, hs = jax.lax.scan(scan_fn, h0,
+                          (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    # state entering chunk c is hs[c-1]
+    prev = jnp.concatenate([h0[None], hs[:-1]], axis=0).swapaxes(0, 1)
+
+    # contribution of carried state to outputs inside each chunk:
+    #   y_q += C_q . (exp(sum_{s<=q} dA_s) * h_prev)
+    state_decay = jnp.exp(jnp.cumsum(dA, axis=2))          # (b,nc,Q,H)
+    Crep = jnp.repeat(Cc, rep, axis=3) if rep > 1 else Cc  # (b,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Crep, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(b, L, H, P)
+    return y.astype(x.dtype), hT
+
+
+def ssd_block(p, cfg, x, *, conv_state=None, ssm_state=None, decode=False):
+    """Full Mamba2 block. x: (B, L, d_model). Returns (y, (conv_st, ssm_st))."""
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xin, B, C, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out, new_conv = _conv(p, conv_in,
+                               conv_state if decode else None)
+    xin, B, C = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + G * N], -1)
+    b, L = x.shape[0], x.shape[1]
+    xh = xin.reshape(b, L, H, P)
+    Bh = B.reshape(b, L, G, N)
+    Ch = C.reshape(b, L, G, N)
+    dth = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])   # (b,L,H)
+    if getattr(cfg, "ssd_shard_heads", False) and not decode:
+        from jax.sharding import PartitionSpec as _P
+        _c = jax.lax.with_sharding_constraint
+        xh = _c(xh, _P(None, None, "model", None))
+        dth = _c(dth, _P(None, None, "model"))
+    if decode:
+        # single-token recurrence: h = h*exp(dt*A) + dt*B*x
+        A = -jnp.exp(p["a_log"])
+        dA = jnp.exp(dth[:, 0] * A[None, :])               # (b,H)
+        rep = H // G
+        Bx = jnp.repeat(Bh[:, 0], rep, axis=1).reshape(b, H, N) if G != H else Bh[:, 0]
+        Cx = jnp.repeat(Ch[:, 0], rep, axis=1).reshape(b, H, N) if G != H else Ch[:, 0]
+        dtx = dth[:, 0, :, None] * xh[:, 0].astype(jnp.float32)
+        h = ssm_state.astype(jnp.float32) * dA[..., None, None] \
+            + dtx[..., None] * Bx[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cx)
+        y = y + p["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, H * P).astype(x.dtype)
+        new_ssm = h
+    else:
+        y, new_ssm = ssd_scan(cfg, xh, dth, Bh, Ch, p["a_log"],
+                              init_state=ssm_state)
+        y = y + p["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(b, L, H * P)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], (new_conv, new_ssm)

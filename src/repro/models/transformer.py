@@ -1,0 +1,489 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are stacked with ``jax.lax.scan`` over depth (per-layer params carry
+a leading n_layers axis) — essential to keep HLO size and compile time flat
+in depth for the 512-device dry-runs. Heterogeneous stacks (deepseek's
+dense first layer, recurrentgemma's (rec, rec, attn) pattern) scan the
+homogeneous portion and unroll the remainder.
+
+API (used by train/serve/launch):
+    init(key, dtype)                     -> params
+    forward(params, batch)               -> logits (f32)
+    loss(params, batch)                  -> (scalar, metrics)
+    prefill(params, batch)               -> (logits, caches)
+    decode_step(params, caches, tok, pos)-> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rg
+from . import ssm as ssm_mod
+from .layers import (
+    cross_entropy,
+    dense_init,
+    embed,
+    embed_params,
+    mlp,
+    mlp_params,
+    rmsnorm,
+    rmsnorm_params,
+    unembed,
+)
+
+
+# ---------------------------------------------------------------------------
+# per-layer param builders
+# ---------------------------------------------------------------------------
+
+def _attn_block_params(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln_attn": rmsnorm_params(cfg.d_model, dtype),
+         "attn": attn.attn_params(k1, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim, dtype,
+                                  cfg.qkv_bias),
+         "ln_mlp": rmsnorm_params(cfg.d_model, dtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_params(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def _ssm_block_params(key, cfg: ModelConfig, dtype):
+    k1, _ = jax.random.split(key)
+    return {"ln": rmsnorm_params(cfg.d_model, dtype),
+            "ssm": ssm_mod.ssd_params(k1, cfg, dtype)}
+
+
+def _rec_block_params(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln_mix": rmsnorm_params(cfg.d_model, dtype),
+            "rec": rg.rglru_params(k1, cfg, dtype),
+            "ln_mlp": rmsnorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype)}
+
+
+def _hyb_attn_block_params(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln_mix": rmsnorm_params(cfg.d_model, dtype),
+            "attn": attn.attn_params(k1, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln_mlp": rmsnorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_block_fwd(p, cfg, x, positions, window=0):
+    h, _ = attn.attention(p["attn"], rmsnorm(p["ln_attn"], x, cfg.norm_eps),
+                          positions, cfg, window=window)
+    x = x + h
+    y = rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe" and "moe" in p:
+        m, aux = moe_mod.moe_layer(p["moe"], cfg, y)
+    else:
+        m, aux = mlp(p["mlp"], y, cfg.activation), 0.0
+    return x + m, aux
+
+
+def _ssm_block_fwd(p, cfg, x, conv_st=None, ssm_st=None, decode=False):
+    y, st = ssm_mod.ssd_block(p["ssm"], cfg, rmsnorm(p["ln"], x, cfg.norm_eps),
+                              conv_state=conv_st, ssm_state=ssm_st,
+                              decode=decode)
+    return x + y, st
+
+
+def _rec_block_fwd(p, cfg, x, conv_st=None, h_st=None, decode=False):
+    y, st = rg.recurrent_block(p["rec"], rmsnorm(p["ln_mix"], x, cfg.norm_eps),
+                               conv_state=conv_st, h_state=h_st, decode=decode)
+    x = x + y
+    return x + mlp(p["mlp"], rmsnorm(p["ln_mlp"], x, cfg.norm_eps),
+                   cfg.activation), st
+
+
+def _hyb_attn_fwd(p, cfg, x, positions):
+    h, _ = attn.attention(p["attn"], rmsnorm(p["ln_mix"], x, cfg.norm_eps),
+                          positions, cfg, window=cfg.window)
+    x = x + h
+    return x + mlp(p["mlp"], rmsnorm(p["ln_mlp"], x, cfg.norm_eps),
+                   cfg.activation)
+
+
+def _stacked_init(fn, key, n, cfg, dtype):
+    return jax.vmap(lambda k: fn(k, cfg, dtype))(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # ---- init -------------------------------------------------------------
+    def init(self, key, dtype=jnp.float32) -> dict:
+        cfg = self.cfg
+        kE, kL, kX, kP = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": embed_params(kE, cfg.padded_vocab, cfg.d_model, dtype,
+                                  cfg.tie_embeddings),
+            "ln_f": rmsnorm_params(cfg.d_model, dtype),
+        }
+        if cfg.family == "ssm":
+            params["blocks"] = _stacked_init(_ssm_block_params, kL,
+                                             cfg.n_layers, cfg, dtype)
+        elif cfg.family == "hybrid":
+            pat = cfg.block_pattern
+            n_groups, rem = divmod(cfg.n_layers, len(pat))
+            groups = {}
+            kG = jax.random.split(kL, len(pat))
+            for i, kind in enumerate(pat):
+                fn = _rec_block_params if kind == "rec" else _hyb_attn_block_params
+                groups[f"{i}_{kind}"] = _stacked_init(fn, kG[i], n_groups,
+                                                      cfg, dtype)
+            params["groups"] = groups
+            kR = jax.random.split(kX, max(rem, 1))
+            params["tail"] = [
+                (_rec_block_params if pat[i % len(pat)] == "rec"
+                 else _hyb_attn_block_params)(kR[i], cfg, dtype)
+                for i in range(rem)]
+        else:  # dense / moe / vlm
+            n_scan = cfg.n_layers - int(cfg.first_layer_dense)
+            params["blocks"] = _stacked_init(_attn_block_params, kL, n_scan,
+                                             cfg, dtype)
+            if cfg.first_layer_dense:
+                dense_cfg = dataclasses.replace(cfg, family="dense",
+                                                d_ff=cfg.dense_d_ff)
+                params["block0"] = _attn_block_params(kX, dense_cfg, dtype)
+            if cfg.family == "vlm":
+                params["img_proj"] = dense_init(kP, cfg.d_model, cfg.d_model,
+                                                dtype)
+        return params
+
+    # ---- embedding frontends ------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.family == "vlm":
+            img = batch["image_embeds"].astype(x.dtype) @ params["img_proj"]
+            x = jnp.concatenate([img, x], axis=1)
+        if cfg.family == "hybrid":
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)  # gemma scaling
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+
+    # ---- full-sequence forward ----------------------------------------------
+    def forward(self, params, batch, last_only: bool = False):
+        logits, _, _ = self._forward_full(params, batch, want_cache=False,
+                                          last_only=last_only)
+        return logits
+
+    def _forward_full(self, params, batch, want_cache: bool,
+                      last_only: bool = False):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        aux_total = 0.0
+        caches = None
+
+        if cfg.family == "ssm":
+            def body(h, layer_p):
+                h2, st = _ssm_block_fwd(layer_p, cfg, h)
+                return h2, st if want_cache else 0
+            x, sts = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+            caches = {"ssm": sts} if want_cache else None
+
+        elif cfg.family == "hybrid":
+            pat = cfg.block_pattern
+            n_groups, rem = divmod(cfg.n_layers, len(pat))
+
+            def body(h, group_p):
+                sts = {}
+                for i, kind in enumerate(pat):
+                    p_i = group_p[f"{i}_{kind}"]
+                    if kind == "rec":
+                        h, st = _rec_block_fwd(p_i, cfg, h)
+                        sts[f"{i}_rec"] = st
+                    else:
+                        h = _hyb_attn_fwd(p_i, cfg, h, positions)
+                        sts[f"{i}_attn"] = 0
+                return h, sts if want_cache else 0
+            x, sts = jax.lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+            for i, tail_p in enumerate(params["tail"]):
+                kind = pat[i % len(pat)]
+                if kind == "rec":
+                    x, _ = _rec_block_fwd(tail_p, cfg, x)
+                else:
+                    x = _hyb_attn_fwd(tail_p, cfg, x, positions)
+            caches = {"hybrid": sts} if want_cache else None
+
+        else:  # dense / moe / vlm
+            if cfg.first_layer_dense:
+                dense_cfg = dataclasses.replace(cfg, family="dense")
+                x, _ = _attn_block_fwd(params["block0"], dense_cfg, x, positions)
+
+            def body(h, layer_p):
+                h2, aux = _attn_block_fwd(layer_p, cfg, h, positions)
+                return h2, aux
+            x, auxs = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+            aux_total = jnp.sum(auxs) if cfg.family == "moe" else 0.0
+
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if last_only:
+            # serving prefill: only the last position's logits are needed —
+            # slicing BEFORE the unembed removes a 2*B*S*D*V matmul
+            x = x[:, -1:]
+        logits = unembed(params["embed"], x, cfg.logits_soft_cap)
+        return logits, aux_total, caches
+
+    # ---- loss ----------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux, _ = self._forward_full(params, batch, want_cache=False)
+        if cfg.family == "vlm":
+            logits = logits[:, cfg.num_image_tokens:, :]
+        ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ---- serving: prefill + single-token decode -------------------------------
+    def prefill(self, params, batch):
+        """Full-context forward that also materializes decode caches."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        S = x.shape[1]
+
+        if cfg.family == "ssm":
+            def body(h, layer_p):
+                h2, st = _ssm_block_fwd(layer_p, cfg, h)
+                return h2, st
+            x, sts = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+            caches = {"ssm": sts, "pos": jnp.int32(S)}
+        elif cfg.family == "hybrid":
+            caches = self._hybrid_prefill_caches(params, batch)
+            x = caches.pop("_hidden")
+        else:
+            def body(h, layer_p):
+                hn = rmsnorm(layer_p["ln_attn"], h, cfg.norm_eps)
+                a, (k, v) = attn.attention(layer_p["attn"], hn, positions,
+                                           cfg, window=0)
+                h = h + a
+                y = rmsnorm(layer_p["ln_mlp"], h, cfg.norm_eps)
+                if cfg.family == "moe" and "moe" in layer_p:
+                    m, _ = moe_mod.moe_layer(layer_p["moe"], cfg, y)
+                else:
+                    m = mlp(layer_p["mlp"], y, cfg.activation)
+                return h + m, attn.KVCache(k=k, v=v)
+            x0 = x
+            if cfg.first_layer_dense:
+                dense_cfg = dataclasses.replace(cfg, family="dense")
+                x0, _ = _attn_block_fwd(params["block0"], dense_cfg, x, positions)
+                # (cache for block0 omitted from scan; handled separately)
+                hn = rmsnorm(params["block0"]["ln_attn"], x, cfg.norm_eps)
+                _, (k0, v0) = attn.attention(params["block0"]["attn"], hn,
+                                             positions, cfg)
+                cache0 = attn.KVCache(k=k0, v=v0)
+            x, kv = jax.lax.scan(body, x0, params["blocks"], unroll=cfg.scan_unroll)
+            caches = {"kv": kv, "pos": jnp.int32(S)}
+            if cfg.first_layer_dense:
+                caches["kv0"] = cache0
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.logits_soft_cap)
+        return logits, caches
+
+    def _hybrid_prefill_caches(self, params, batch):
+        cfg = self.cfg
+        pat = cfg.block_pattern
+        x, positions = self._embed_inputs(params, batch)
+
+        def body(h, group_p):
+            sts = {}
+            for i, kind in enumerate(pat):
+                p_i = group_p[f"{i}_{kind}"]
+                if kind == "rec":
+                    h, st = _rec_block_fwd(p_i, cfg, h)
+                    sts[f"{i}_rec"] = st
+                else:
+                    hn = rmsnorm(p_i["ln_mix"], h, cfg.norm_eps)
+                    a, (k, v) = attn.attention(p_i["attn"], hn, positions,
+                                               cfg, window=cfg.window)
+                    h = h + a
+                    h = h + mlp(p_i["mlp"],
+                                rmsnorm(p_i["ln_mlp"], h, cfg.norm_eps),
+                                cfg.activation)
+                    # keep only the last `window` positions (ring cache)
+                    sts[f"{i}_attn"] = attn.KVCache(
+                        k=k[:, -cfg.window:], v=v[:, -cfg.window:])
+            return h, sts
+        x, sts = jax.lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+        tails = []
+        for i, tail_p in enumerate(params["tail"]):
+            kind = pat[i % len(pat)]
+            if kind == "rec":
+                x, st = _rec_block_fwd(tail_p, cfg, x)
+                tails.append(st)
+            else:
+                x = _hyb_attn_fwd(tail_p, cfg, x, positions)
+                tails.append(0)
+        return {"groups": sts, "tail": tails,
+                "pos": jnp.int32(x.shape[1]), "_hidden": x}
+
+    def init_decode_caches(self, batch_size: int, capacity: int,
+                           dtype=jnp.float32):
+        """Zero caches for decode-from-scratch (the dry-run serve_step)."""
+        cfg = self.cfg
+        L = cfg.n_layers
+        if cfg.family == "ssm":
+            K = cfg.conv_kernel
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            return {"ssm": (
+                jnp.zeros((L, batch_size, K - 1, conv_dim), dtype),
+                jnp.zeros((L, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32)),
+                "pos": jnp.int32(0)}
+        if cfg.family == "hybrid":
+            pat = cfg.block_pattern
+            n_groups, rem = divmod(cfg.n_layers, len(pat))
+            groups = {}
+            for i, kind in enumerate(pat):
+                if kind == "rec":
+                    groups[f"{i}_rec"] = (
+                        jnp.zeros((n_groups, batch_size, 3, cfg.lru_width), dtype),
+                        jnp.zeros((n_groups, batch_size, cfg.lru_width),
+                                  jnp.float32))
+                else:
+                    cap = min(cfg.window, capacity) if cfg.window else capacity
+                    z = jnp.zeros((n_groups, batch_size, cap, cfg.n_kv_heads,
+                                   cfg.head_dim), dtype)
+                    groups[f"{i}_attn"] = attn.KVCache(k=z, v=z)
+            tail = []
+            for i in range(rem):
+                if pat[i % len(pat)] == "rec":
+                    tail.append((jnp.zeros((batch_size, 3, cfg.lru_width), dtype),
+                                 jnp.zeros((batch_size, cfg.lru_width),
+                                           jnp.float32)))
+                else:
+                    cap = min(cfg.window, capacity) if cfg.window else capacity
+                    z = jnp.zeros((batch_size, cap, cfg.n_kv_heads,
+                                   cfg.head_dim), dtype)
+                    tail.append(attn.KVCache(k=z, v=z))
+            return {"groups": groups, "tail": tail, "pos": jnp.int32(0)}
+        # dense / moe / vlm
+        n_scan = L - int(cfg.first_layer_dense)
+        z = jnp.zeros((n_scan, batch_size, capacity, cfg.n_kv_heads,
+                       cfg.head_dim), dtype)
+        caches = {"kv": attn.KVCache(k=z, v=z), "pos": jnp.int32(0)}
+        if cfg.first_layer_dense:
+            z0 = jnp.zeros((batch_size, capacity, cfg.n_kv_heads,
+                            cfg.head_dim), dtype)
+            caches["kv0"] = attn.KVCache(k=z0, v=z0)
+        return caches
+
+    def decode_step(self, params, caches, token, pos=None):
+        """token: (B, 1) int32. Returns (logits (B,1,V), new caches)."""
+        cfg = self.cfg
+        pos = caches["pos"] if pos is None else pos
+        x = embed(params["embed"], token)
+        if cfg.family == "hybrid":
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+
+        if cfg.family == "ssm":
+            def body(h, xs):
+                layer_p, conv_st, ssm_st = xs
+                h2, (c2, s2) = _ssm_block_fwd(layer_p, cfg, h, conv_st,
+                                              ssm_st, decode=True)
+                return h2, (c2, s2)
+            x, sts = jax.lax.scan(body, x,
+                                  (params["blocks"], *caches["ssm"]), unroll=cfg.scan_unroll)
+            new = {"ssm": sts, "pos": pos + 1}
+
+        elif cfg.family == "hybrid":
+            pat = cfg.block_pattern
+            new_groups = {}
+
+            def body(h, xs):
+                group_p, gcaches = xs
+                outs = {}
+                for i, kind in enumerate(pat):
+                    p_i = group_p[f"{i}_{kind}"]
+                    if kind == "rec":
+                        conv_st, h_st = gcaches[f"{i}_rec"]
+                        h, st = _rec_block_fwd(p_i, cfg, h, conv_st, h_st,
+                                               decode=True)
+                        outs[f"{i}_rec"] = st
+                    else:
+                        hn = rmsnorm(p_i["ln_mix"], h, cfg.norm_eps)
+                        a, kv = attn.decode_attention(
+                            p_i["attn"], hn, pos, gcaches[f"{i}_attn"], cfg,
+                            window=cfg.window)
+                        h = h + a
+                        h = h + mlp(p_i["mlp"],
+                                    rmsnorm(p_i["ln_mlp"], h, cfg.norm_eps),
+                                    cfg.activation)
+                        outs[f"{i}_attn"] = kv
+                return h, outs
+            x, new_groups = jax.lax.scan(body, x,
+                                         (params["groups"], caches["groups"]), unroll=cfg.scan_unroll)
+            new_tail = []
+            for i, tail_p in enumerate(params["tail"]):
+                kind = pat[i % len(pat)]
+                if kind == "rec":
+                    conv_st, h_st = caches["tail"][i]
+                    x, st = _rec_block_fwd(tail_p, cfg, x, conv_st, h_st,
+                                           decode=True)
+                    new_tail.append(st)
+                else:
+                    hn = rmsnorm(tail_p["ln_mix"], x, cfg.norm_eps)
+                    a, kv = attn.decode_attention(tail_p["attn"], hn, pos,
+                                                  caches["tail"][i], cfg,
+                                                  window=cfg.window)
+                    x = x + a
+                    x = x + mlp(tail_p["mlp"],
+                                rmsnorm(tail_p["ln_mlp"], x, cfg.norm_eps),
+                                cfg.activation)
+                    new_tail.append(kv)
+            new = {"groups": new_groups, "tail": new_tail, "pos": pos + 1}
+
+        else:
+            new = {"pos": pos + 1}
+            if cfg.first_layer_dense:
+                p0 = params["block0"]
+                hn = rmsnorm(p0["ln_attn"], x, cfg.norm_eps)
+                a, kv0 = attn.decode_attention(p0["attn"], hn, pos,
+                                               caches["kv0"], cfg)
+                x = x + a
+                x = x + mlp(p0["mlp"], rmsnorm(p0["ln_mlp"], x, cfg.norm_eps),
+                            cfg.activation)
+                new["kv0"] = kv0
+
+            def body(h, xs):
+                layer_p, kv = xs
+                hn = rmsnorm(layer_p["ln_attn"], h, cfg.norm_eps)
+                a, kv2 = attn.decode_attention(layer_p["attn"], hn, pos, kv,
+                                               cfg)
+                h = h + a
+                y = rmsnorm(layer_p["ln_mlp"], h, cfg.norm_eps)
+                if cfg.family == "moe" and "moe" in layer_p:
+                    m, _ = moe_mod.moe_layer(layer_p["moe"], cfg, y)
+                else:
+                    m = mlp(layer_p["mlp"], y, cfg.activation)
+                return h + m, kv2
+            x, kv = jax.lax.scan(body, x, (params["blocks"], caches["kv"]), unroll=cfg.scan_unroll)
+            new["kv"] = kv
+
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.logits_soft_cap)
+        return logits, new

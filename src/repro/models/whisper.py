@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the brief: the model consumes
+precomputed frame embeddings (B, encoder_seq, d_model) from
+``input_specs()``. The transformer backbone is complete: encoder
+(bidirectional self-attention, LayerNorm+GELU), decoder (causal
+self-attention with KV cache + cross-attention over encoder output).
+Decoder positions use sinusoidal tables so any assigned decode length
+works without a learned-table resize (architectural choice documented in
+DESIGN.md; real whisper-tiny caps at 448 learned positions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from .layers import (
+    cross_entropy,
+    embed,
+    embed_params,
+    layernorm,
+    layernorm_params,
+    mlp,
+    mlp_params,
+    sinusoidal_positions,
+    unembed,
+)
+
+
+def _enc_block_params(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": layernorm_params(cfg.d_model, dtype),
+            "attn": attn.attn_params(k1, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln2": layernorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _dec_block_params(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": layernorm_params(cfg.d_model, dtype),
+            "self": attn.attn_params(k1, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln_x": layernorm_params(cfg.d_model, dtype),
+            "cross": attn.attn_params(k2, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln2": layernorm_params(cfg.d_model, dtype),
+            "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDec:
+    cfg: ModelConfig
+
+    def init(self, key, dtype=jnp.float32) -> dict:
+        cfg = self.cfg
+        kE, kEnc, kDec = jax.random.split(key, 3)
+        enc = jax.vmap(lambda k: _enc_block_params(k, cfg, dtype))(
+            jax.random.split(kEnc, cfg.encoder_layers))
+        dec = jax.vmap(lambda k: _dec_block_params(k, cfg, dtype))(
+            jax.random.split(kDec, cfg.n_layers))
+        return {"embed": embed_params(kE, cfg.padded_vocab, cfg.d_model,
+                                      dtype, cfg.tie_embeddings),
+                "enc_blocks": enc, "dec_blocks": dec,
+                "ln_enc": layernorm_params(cfg.d_model, dtype),
+                "ln_dec": layernorm_params(cfg.d_model, dtype)}
+
+    # ---- encoder -----------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        S = frames.shape[1]
+        pos_tab = jnp.asarray(sinusoidal_positions(S, cfg.d_model),
+                              frames.dtype)
+        x = frames + pos_tab[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     frames.shape[:2])
+
+        def body(h, p):
+            a, _ = attn.attention(p["attn"], layernorm(p["ln1"], h),
+                                  positions, cfg, causal=False, rope=False)
+            h = h + a
+            return h + mlp(p["mlp"], layernorm(p["ln2"], h), "gelu"), 0
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=cfg.scan_unroll)
+        return layernorm(params["ln_enc"], x)
+
+    # ---- decoder (full sequence: train/prefill) ------------------------------
+    def decode_full(self, params, tokens, enc_out, want_cache=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens)
+        x = x + jnp.asarray(sinusoidal_positions(S, cfg.d_model),
+                            x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+            enc_out.shape[:2])
+
+        def body(h, p):
+            a, (k, v) = attn.attention(p["self"], layernorm(p["ln1"], h),
+                                       positions, cfg, causal=True,
+                                       rope=False)
+            h = h + a
+            c, (ck, cv) = attn.attention(p["cross"], layernorm(p["ln_x"], h),
+                                         enc_pos, cfg, x_kv=enc_out,
+                                         causal=False, rope=False)
+            h = h + c
+            h = h + mlp(p["mlp"], layernorm(p["ln2"], h), "gelu")
+            ys = (attn.KVCache(k, v), attn.KVCache(ck, cv)) if want_cache else 0
+            return h, ys
+        x, caches = jax.lax.scan(body, x, params["dec_blocks"], unroll=cfg.scan_unroll)
+        x = layernorm(params["ln_dec"], x)
+        return unembed(params["embed"], x), caches
+
+    # ---- losses / serving ----------------------------------------------------
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        logits, _ = self.decode_full(params, batch["tokens"], enc_out)
+        ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return ce, {"ce": ce, "aux": 0.0}
+
+    # generic LM-compatible API
+    def forward(self, params, batch, last_only: bool = False):
+        enc_out = self.encode(params, batch["frames"])
+        logits, _ = self.decode_full(params, batch["tokens"], enc_out)
+        return logits[:, -1:] if last_only else logits
+
+    def prefill(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        logits, caches = self.decode_full(params, batch["tokens"], enc_out,
+                                          want_cache=True)
+        return logits, {"dec": caches, "enc_out": enc_out,
+                        "pos": jnp.int32(batch["tokens"].shape[1])}
+
+    def init_decode_caches(self, batch_size, capacity, dtype=jnp.float32):
+        cfg = self.cfg
+        L = cfg.n_layers
+        z = jnp.zeros((L, batch_size, capacity, cfg.n_kv_heads, cfg.head_dim),
+                      dtype)
+        enc = jnp.zeros((batch_size, cfg.encoder_seq, cfg.d_model), dtype)
+        zc = jnp.zeros((L, batch_size, cfg.encoder_seq, cfg.n_kv_heads,
+                        cfg.head_dim), dtype)
+        return {"dec": (attn.KVCache(z, z), attn.KVCache(zc, zc)),
+                "enc_out": enc, "pos": jnp.int32(0)}
+
+    def decode_step(self, params, caches, token, pos=None):
+        """One decoder token against cached self-attn + encoder cross-attn."""
+        cfg = self.cfg
+        pos = caches["pos"] if pos is None else pos
+        B = token.shape[0]
+        pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        x = embed(params["embed"], token)
+        # sinusoidal position at a dynamic (per-row) index, computed directly
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+        ang = pos_v.astype(jnp.float32)[:, None] / jnp.power(10_000.0, 2 * i / d)
+        posemb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None]
+        x = x + posemb.astype(x.dtype)
+        enc_out = caches["enc_out"]
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+            enc_out.shape[:2])
+        self_kv, cross_kv = caches["dec"]
+
+        def body(h, xs):
+            p, skv, ck, cv = xs
+            a, skv2 = attn.decode_attention(p["self"],
+                                            layernorm(p["ln1"], h), pos,
+                                            skv, cfg, rope=False)
+            h = h + a
+            # cross-attention reads the static encoder K/V (precomputed at
+            # prefill; zeros in decode-from-scratch dry-runs)
+            c, _ = attn.attention(p["cross"], layernorm(p["ln_x"], h),
+                                  enc_pos, cfg, x_kv=enc_out, causal=False,
+                                  rope=False)
+            h = h + c
+            h = h + mlp(p["mlp"], layernorm(p["ln2"], h), "gelu")
+            return h, skv2
+        x, self_kv2 = jax.lax.scan(body, x, (params["dec_blocks"], self_kv,
+                                             cross_kv.k, cross_kv.v), unroll=cfg.scan_unroll)
+        x = layernorm(params["ln_dec"], x)
+        logits = unembed(params["embed"], x)
+        return logits, {"dec": (self_kv2, cross_kv), "enc_out": enc_out,
+                        "pos": pos + 1}

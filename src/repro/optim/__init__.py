@@ -1,0 +1,4 @@
+"""Optimization: pure-JAX AdamW, clipping, gradient compression."""
+from . import adamw, clip, compression
+
+__all__ = ["adamw", "clip", "compression"]

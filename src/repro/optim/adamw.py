@@ -1,0 +1,66 @@
+"""AdamW in pure JAX (no optax in this environment) with:
+
+  * f32 master accumulators regardless of param dtype (bf16-safe),
+  * decoupled weight decay,
+  * linear warmup + cosine decay schedule,
+  * global-norm gradient clipping (clip.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RunConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment (f32)
+    nu: Any       # second moment (f32)
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(rc: RunConfig, step, total_steps: int = 10_000):
+    warm = jnp.minimum(step / jnp.maximum(rc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - rc.warmup_steps)
+                 / jnp.maximum(total_steps - rc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return rc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def apply(rc: RunConfig, params, grads, state: AdamWState,
+          total_steps: int = 10_000):
+    """Returns (new_params, new_state). Decay skips 1-D params (norms/bias)."""
+    step = state.step + 1
+    lr = schedule(rc, step, total_steps)
+    b1, b2, eps = rc.beta1, rc.beta2, 1e-8
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * g32 * g32
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:
+            delta = delta + rc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

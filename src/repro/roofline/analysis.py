@@ -1,0 +1,177 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model).
+
+Three terms per (arch x shape x mesh) cell:
+
+    compute_s    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory_s     = HLO_bytes / (chips * HBM_BW)
+    collective_s = collective_bytes / (chips * LINK_BW * links)
+
+cost_analysis() reports whole-program FLOPs/bytes (already per the SPMD
+module = per device). collective_bytes comes from parsing the optimized
+HLO text: the summed operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) measures how much of the
+compiled compute is "useful" (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+# ---- TPU v5e hardware constants (per the brief) ------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+ICI_LINKS = 4                # links per chip usable concurrently (2D torus)
+HBM_PER_CHIP = 16 * 2**30    # v5e: 16 GiB
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,4096,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\b(" + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    if not dims:
+        return nb
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> float:
+    """Sum output-shape bytes over every collective op in the module.
+
+    Tuple-shaped collectives (multi-operand all-reduce) appear as
+    ``= (bf16[...], bf16[...]) all-reduce(...)`` — handled by scanning all
+    shape literals between '=' and the op name. ``-start``(async) ops are
+    counted once; their ``-done`` twins carry no shape payload in the same
+    line format.
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        hit = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                hit = c
+                break
+        if hit is None:
+            continue
+        lhs = line.split(f" {hit}")[0]
+        for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", lhs):
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# parameter counts for MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def param_count(cfg) -> tuple[float, float]:
+    """(total_params, active_params) — embedding excluded from the 6ND
+    convention's N (we report both)."""
+    d, L = cfg.d_model, cfg.n_layers
+    V = cfg.padded_vocab
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        return d * cfg.n_heads * cfg.head_dim + \
+            2 * d * cfg.n_kv_heads * cfg.head_dim + \
+            cfg.n_heads * cfg.head_dim * d
+
+    def mlp_params(ff):
+        mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        return mult * d * ff
+
+    if cfg.family == "ssm":
+        di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        per = d * (2 * di + 2 * G * N + H) + di * d
+        total = L * per + emb
+        return total, total
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_rec = sum(1 for i in range(L) if pat[i % len(pat)] == "rec")
+        n_att = L - n_rec
+        w = cfg.lru_width
+        rec = 2 * d * w + 2 * w * w + w * d
+        per_mlp = mlp_params(cfg.d_ff)
+        total = n_rec * (rec + per_mlp) + n_att * (attn_params() + per_mlp) + emb
+        return total, total
+    if cfg.family == "moe":
+        shared = mlp_params(cfg.d_ff * cfg.n_shared_experts) \
+            if cfg.n_shared_experts else 0
+        expert = mlp_params(cfg.d_ff)
+        n_moe = L - int(cfg.first_layer_dense)
+        total = n_moe * (attn_params() + cfg.n_experts * expert + shared
+                         + d * cfg.n_experts) + emb
+        active = n_moe * (attn_params() + cfg.top_k * expert + shared
+                          + d * cfg.n_experts) + emb
+        if cfg.first_layer_dense:
+            dense = attn_params() + mlp_params(cfg.dense_d_ff)
+            total += dense
+            active += dense
+        return total, active
+    if cfg.family == "audio":
+        enc = cfg.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+        dec = L * (2 * attn_params() + mlp_params(cfg.d_ff))
+        total = enc + dec + emb
+        return total, total
+    # dense / vlm
+    total = L * (attn_params() + mlp_params(cfg.d_ff)) + emb
+    return total, total
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D convention (D = tokens processed by the step)."""
+    _, active = param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens        # forward only
+    tokens = shape.global_batch              # one new token per sequence
+    return 2.0 * active * tokens
+
+
+def roofline_row(cfg, shape, row: dict) -> dict:
+    """Compute the three terms + bottleneck for one dry-run row.
+
+    cost_analysis flops/bytes on the SPMD module are per-device."""
+    chips = row["n_chips"]
+    flops_dev = row["flops"]
+    bytes_dev = row["bytes_accessed"]
+    coll_dev = row["collective_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / (LINK_BW * ICI_LINKS)
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound if bound else 0.0,
+        "step_time_lower_bound_s": bound,
+    }

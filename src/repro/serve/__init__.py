@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching engine (flexible active mask)."""
+from .engine import Engine, Request
+
+__all__ = ["Engine", "Request"]

@@ -1,0 +1,165 @@
+"""Serving engine: continuous batching with a flexible active mask.
+
+This is where the eGPU's FLEXIBLE ISA genuinely transfers (DESIGN.md §5):
+the paper resizes the active thread block per instruction with zero flush;
+the serving analogue is a fixed-capacity decode batch whose *active-slot
+mask* varies per step with zero recompilation — requests enter and leave
+slots while one compiled ``decode_step`` XLA program runs every step. Like
+an eGPU {w8,d1} instruction, a half-empty batch executes the same
+wavefront with inactive lanes masked.
+
+Slots: each request owns a batch row of every cache tensor. Prefill runs
+at batch 1 and its caches are spliced into the slot row; decode advances
+ALL slots every step, sampling is masked by activity, finished slots free
+immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                 # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, *, max_slots: int = 8,
+                 capacity: int = 256, dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.capacity = capacity
+        self.caches = model.init_decode_caches(max_slots, capacity, dtype)
+        self.active = np.zeros(max_slots, bool)
+        self.positions = np.zeros(max_slots, np.int32)
+        self.budget = np.zeros(max_slots, np.int32)
+        self.eos = np.full(max_slots, -1, np.int32)
+        self.requests: dict[int, Request] = {}
+        self.slot_of: dict[int, int] = {}
+        self.last_token = np.zeros(max_slots, np.int32)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+        self.steps_run = 0
+        self.active_history: list[int] = []
+        self.pending: list["Request"] = []
+
+    # ---- jitted kernels -----------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        logits, caches = self.model.prefill(params, {"tokens": tokens})
+        return logits[:, -1], caches
+
+    def _decode_impl(self, params, caches, tokens, positions, active):
+        # vectorized per-slot positions: each slot decodes at its own point
+        # in its sequence (decode_attention takes (B,) positions)
+        logits, caches = self.model.decode_step(params, caches,
+                                                tokens[:, None], positions)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, 0)
+        return nxt, caches
+
+    # ---- slot management ------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Admit a request; queues it if all slots are busy."""
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
+            self.pending.append(req)
+            return False
+        slot = int(free[0])
+        # prefill at batch 1, splice caches into the slot row
+        toks = jnp.asarray(req.prompt[None].astype(np.int32))
+        last_logits, pf_caches = self._prefill(self.params, toks)
+
+        def splice(slot_cache, pf):
+            if not isinstance(pf, jax.Array) or pf.ndim == 0:
+                return slot_cache
+            # caches are stacked (layers, B, ...) or (B, ...); find the batch
+            # axis: prefill arrays have batch=1 where slot caches have
+            # max_slots
+            for ax in range(pf.ndim):
+                if pf.shape[ax] == 1 and slot_cache.shape[ax] == self.max_slots:
+                    # pad/crop the sequence axis to capacity before splicing
+                    pfa = pf
+                    for sax in range(pf.ndim):
+                        if sax == ax:
+                            continue
+                        if pfa.shape[sax] != slot_cache.shape[sax]:
+                            pad = slot_cache.shape[sax] - pfa.shape[sax]
+                            if pad < 0:
+                                idx = [slice(None)] * pfa.ndim
+                                idx[sax] = slice(0, slot_cache.shape[sax])
+                                pfa = pfa[tuple(idx)]
+                            else:
+                                widths = [(0, 0)] * pfa.ndim
+                                widths[sax] = (0, pad)
+                                pfa = jnp.pad(pfa, widths)
+                    start = [0] * pf.ndim
+                    start[ax] = slot
+                    return jax.lax.dynamic_update_slice(
+                        slot_cache, pfa.astype(slot_cache.dtype), start)
+            return slot_cache
+
+        self.caches = jax.tree_util.tree_map(
+            splice, self.caches, pf_caches,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+        if "pos" in self.caches:
+            pass  # engine tracks positions host-side
+        self.active[slot] = True
+        self.positions[slot] = len(req.prompt)
+        self.budget[slot] = req.max_new_tokens
+        self.eos[slot] = req.eos_id
+        self.last_token[slot] = int(np.argmax(np.asarray(last_logits)[0]))
+        req.out.append(int(self.last_token[slot]))
+        self.requests[req.rid] = req
+        self.slot_of[req.rid] = slot
+        return True
+
+    def step(self) -> int:
+        """One decode step over all slots (flexible width = #active)."""
+        while self.pending and not self.active.all():
+            self.submit(self.pending.pop(0))
+        if not self.active.any():
+            return 0
+        act = jnp.asarray(self.active)
+        toks = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.positions)
+        nxt, self.caches = self._decode(self.params, self.caches, toks, pos,
+                                        act)
+        nxt = np.asarray(nxt)
+        self.steps_run += 1
+        self.active_history.append(int(self.active.sum()))
+        n_active = 0
+        for rid, slot in list(self.slot_of.items()):
+            if not self.active[slot]:
+                continue
+            tok = int(nxt[slot])
+            req = self.requests[rid]
+            req.out.append(tok)
+            self.positions[slot] += 1
+            self.budget[slot] -= 1
+            if tok == self.eos[slot] or self.budget[slot] <= 0 \
+                    or self.positions[slot] >= self.capacity - 1:
+                req.done = True
+                self.active[slot] = False
+                del self.slot_of[rid]
+            else:
+                self.last_token[slot] = tok
+                n_active += 1
+        return n_active
+
+    def run_until_done(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            self.step()
+            if not self.active.any() and not self.pending:
+                break
+        return {rid: r.out for rid, r in self.requests.items()}

@@ -1,0 +1,6 @@
+"""Training substrate: step, loop, pipeline parallelism."""
+from .step import TrainState, init_state, make_compressed_dp_step, make_train_step
+from .loop import LoopResult, Watchdog, train_loop
+
+__all__ = ["TrainState", "init_state", "make_train_step",
+           "make_compressed_dp_step", "LoopResult", "Watchdog", "train_loop"]

@@ -1,0 +1,23 @@
+"""Distributed-behaviour tests, each in a subprocess with 8 host devices
+(the main pytest process must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CASES = ["gspmd_matches_single", "compressed_dp", "pipeline_parallel",
+          "elastic_checkpoint", "decode_sharded"]
+_SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_cases.py")
+
+
+@pytest.mark.parametrize("case", _CASES)
+def test_multidevice(case):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, _SCRIPT, case],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"{case}\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    assert f"PASS {case}" in r.stdout

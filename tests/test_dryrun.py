@@ -1,0 +1,79 @@
+"""Dry-run driver integration test: one real 512-device cell, end to end,
+in a subprocess (the main pytest process keeps 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch.dryrun import apply_policy, layer_variants
+
+
+def test_dryrun_cell_subprocess(tmp_path):
+    out = tmp_path / "dryrun.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k",
+         "--mesh", "both", "--out", str(out)],
+        capture_output=True, text=True, timeout=560, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stderr[-2000:]
+    rows = [json.loads(l) for l in open(out)]
+    assert len(rows) == 2
+    by_mesh = {row["mesh"]: row for row in rows}
+    assert by_mesh["16x16"]["status"] == "ok"
+    assert by_mesh["2x16x16"]["status"] == "ok"
+    sp = by_mesh["16x16"]
+    # roofline fields present and sane (single-pod only)
+    assert sp["dominant"] in ("compute", "memory", "collective")
+    assert sp["flops_scaled"] >= sp["flops"] > 0
+    assert sp["peak_bytes_per_device"] < 16 * 2**30
+    assert 0 < sp["roofline_fraction"] < 1
+    # multi-pod row is the compile proof (no roofline terms)
+    assert "compute_s" not in by_mesh["2x16x16"]
+
+
+def test_layer_variants_cover_all_archs():
+    for name, cfg in ARCHS.items():
+        a, ua, b, ub, n = layer_variants(cfg)
+        assert ub > ua >= 1 and n >= 1, name
+        assert a.scan_unroll and b.scan_unroll
+        assert a.n_layers < b.n_layers <= cfg.n_layers
+
+
+def test_apply_policy_baseline_is_identity():
+    for name, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            c2, opts = apply_policy(cfg, shape, "baseline")
+            assert c2 is cfg
+            assert opts["naive_tp"] and not opts["last_only"]
+
+
+def test_apply_policy_optimized_rules():
+    qw, opts = apply_policy(get_arch("qwen2.5-32b"), SHAPES["prefill_32k"],
+                            "optimized")
+    assert qw.n_heads == 48 and qw.attn_q_chunk == 2048
+    assert not opts["naive_tp"] and opts["last_only"]
+    # train cells revert to baseline per the autotune (iterations 7-9)
+    mb, opts = apply_policy(get_arch("mamba2-780m"), SHAPES["train_4k"],
+                            "optimized")
+    assert opts["naive_tp"]
+    mb, opts = apply_policy(get_arch("mamba2-780m"), SHAPES["decode_32k"],
+                            "optimized")
+    assert opts.get("overrides") == {"in_proj": "fsdp_in"}
+    q15, opts = apply_policy(get_arch("qwen1.5-32b"), SHAPES["decode_32k"],
+                             "optimized")
+    assert "cache_dtype" in opts   # fp8 KV cache
+
+
+def test_skip_matrix_is_exactly_eight_cells():
+    skipped = [(a, s.name) for a, cfg in ARCHS.items()
+               for s in SHAPES.values()
+               if not shape_applicable(cfg, s)[0]]
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s in skipped)

@@ -1,0 +1,334 @@
+"""eGPU ISS behaviour tests: semantics, flexible ISA, snooping, cycles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    SMConfig,
+    assemble,
+    profile,
+    regs_f32,
+    regs_i32,
+    run,
+    run_many,
+    shmem_f32,
+    shmem_i32,
+)
+
+
+def _run(asm, n_threads=16, shmem=None, dim_x=None, depth=64, **kw):
+    cfg = SMConfig(n_threads=n_threads, dim_x=dim_x or n_threads,
+                   shmem_depth=depth, max_steps=10_000, **kw)
+    return cfg, run(cfg, assemble(asm), shmem)
+
+
+# ---------------------------------------------------------------------------
+# arithmetic semantics
+# ---------------------------------------------------------------------------
+
+def test_fp32_arithmetic_exact():
+    sh = np.zeros(64, np.float32)
+    sh[0:16] = np.linspace(-3, 3, 16).astype(np.float32)
+    sh[16:32] = np.linspace(0.1, 7, 16).astype(np.float32)
+    _, st = _run("""
+        TDX R1
+        LOD R2, (R1)+0
+        LOD R3, (R1)+16
+        ADD.FP32 R4, R2, R3
+        SUB.FP32 R5, R2, R3
+        MUL.FP32 R6, R2, R3
+        STOP
+    """, shmem=sh)
+    regs = np.asarray(regs_f32(st))[:16]
+    x, y = sh[0:16], sh[16:32]
+    np.testing.assert_array_equal(regs[:, 4], x + y)
+    np.testing.assert_array_equal(regs[:, 5], x - y)
+    np.testing.assert_array_equal(regs[:, 6], x * y)
+
+
+def test_int_mul_is_16x16():
+    # paper: "The multiply is 16x16 with a 32-bit output"
+    _, st = _run("""
+        LOD R1, #16383
+        LOD R2, #3
+        MUL.INT32 R3, R1, R2
+        LOD R4, #-5
+        MUL.INT32 R5, R4, R2
+        MUL.UINT32 R6, R4, R2
+        STOP
+    """)
+    regs = np.asarray(regs_i32(st))
+    assert regs[0, 3] == 16383 * 3
+    assert regs[0, 5] == -15                      # sign-extended 16-bit
+    assert regs[0, 6] == (np.int64(0xFFFB) * 3)   # low-16 unsigned
+
+
+def test_logic_and_shifts():
+    _, st = _run("""
+        LOD R1, #12345
+        LOD R2, #774
+        AND R3, R1, R2
+        OR  R4, R1, R2
+        XOR R5, R1, R2
+        NOT R6, R1
+        LOD R7, #3
+        LSL R8, R1, R7
+        LSR R9, R1, R7
+        STOP
+    """)
+    r = np.asarray(st.regs)[0]
+    assert r[3] == 12345 & 774
+    assert r[4] == 12345 | 774
+    assert r[5] == 12345 ^ 774
+    assert r[6] == (~np.uint32(12345))
+    assert r[8] == 12345 << 3
+    assert r[9] == 12345 >> 3
+
+
+def test_int_wraparound():
+    _, st = _run("""
+        LOD R1, #16383
+        LOD R2, #16383
+        ADD.INT32 R3, R1, R2
+        LOD R4, #-16384
+        SUB.INT32 R5, R4, R1
+        STOP
+    """)
+    r = np.asarray(regs_i32(st))[0]
+    assert r[3] == 32766
+    assert r[5] == -32767
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1),
+       op=st.sampled_from(["AND", "OR", "XOR"]))
+def test_logic_property(a, b, op):
+    # feed arbitrary bit patterns through shared memory
+    sh = np.zeros(64, np.uint32)
+    sh[0], sh[1] = a, b
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=100)
+    state = run(cfg, assemble(f"""
+        LOD R1, (R0)+0
+        LOD R2, (R0)+1
+        {op} R3, R1, R2
+        STOP
+    """), sh)
+    got = int(np.asarray(state.regs)[0, 3])
+    want = {"AND": a & b, "OR": a | b, "XOR": a ^ b}[op]
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# memory system
+# ---------------------------------------------------------------------------
+
+def test_store_collision_last_thread_wins():
+    # single write port, sequential writeback in thread order
+    _, st = _run("""
+        TDX R1
+        STO R1, (R0)+5
+        STOP
+    """)
+    assert int(np.asarray(shmem_i32(st))[5]) == 15  # highest active thread
+
+
+def test_oob_flagged_and_dropped():
+    _, st = _run("""
+        LOD R1, #4095
+        STO R1, (R1)+0
+        LOD R2, (R1)+0
+        STOP
+    """, depth=64)
+    assert bool(st.oob)
+
+
+def test_lod_sto_roundtrip():
+    sh = np.arange(64, dtype=np.float32)
+    _, st = _run("""
+        TDX R1
+        LOD R2, (R1)+16
+        STO R2, (R1)+32
+        STOP
+    """, shmem=sh)
+    out = np.asarray(shmem_f32(st))
+    np.testing.assert_array_equal(out[32:48], sh[16:32])
+
+
+# ---------------------------------------------------------------------------
+# flexible ISA (the paper's novel contribution)
+# ---------------------------------------------------------------------------
+
+def test_flexible_width_masks_lanes():
+    _, st = _run("""
+        LOD R1, #1 {w4}
+        STOP
+    """, n_threads=32)
+    r = np.asarray(st.regs)[:32, 1].reshape(2, 16)
+    assert (r[:, :4] == 1).all() and (r[:, 4:] == 0).all()
+
+
+def test_flexible_depth_masks_waves():
+    _, st = _run("""
+        LOD R1, #1 {dhalf}
+        LOD R2, #1 {d1}
+        STOP
+    """, n_threads=64)
+    r1 = np.asarray(st.regs)[:64, 1].reshape(4, 16)
+    assert (r1[:2] == 1).all() and (r1[2:] == 0).all()
+    r2 = np.asarray(st.regs)[:64, 2].reshape(4, 16)
+    assert (r2[0] == 1).all() and (r2[1:] == 0).all()
+
+
+def test_flexible_store_single_cycle():
+    # the paper's hero stat: {w1,d1} store = 1 cycle vs 512
+    cfg = SMConfig(n_threads=512, dim_x=512, shmem_depth=1024, max_steps=100)
+    st_full = run(cfg, assemble("TDX R1\nSTO R1, (R1)+0\nSTOP"))
+    st_one = run(cfg, assemble("TDX R1\nSTO R1, (R1)+0 {w1,d1}\nSTOP"))
+    full = int(st_full.cycles_by_class[9])
+    one = int(st_one.cycles_by_class[9])
+    assert full == 512 and one == 1
+
+
+def test_cycle_model_matches_paper_rules():
+    # op = waves, load = threads/4, store = threads (paper §III.A/C)
+    cfg = SMConfig(n_threads=512, dim_x=512, shmem_depth=1024, max_steps=100)
+    st = run(cfg, assemble("""
+        TDX R1
+        ADD.INT32 R2, R1, R1
+        LOD R3, (R1)+0
+        STO R3, (R1)+0
+        STOP
+    """))
+    by = np.asarray(st.cycles_by_class)
+    assert by[3] == 32 + 32      # TDX + ADD: 32 waves each
+    assert by[4] == 128          # 512/4
+    assert by[9] == 512
+
+
+# ---------------------------------------------------------------------------
+# extension units + snooping
+# ---------------------------------------------------------------------------
+
+def test_dot_writes_lane0_per_wavefront():
+    sh = np.zeros(128, np.float32)
+    sh[:64] = np.arange(64)
+    _, st = _run("""
+        TDX R1
+        LOD R2, (R1)+0
+        DOT.FP32 R3, R2, R2
+        STOP
+    """, n_threads=64, shmem=sh, depth=128)
+    x = sh[:64].reshape(4, 16)
+    want = (x * x).sum(axis=1)
+    regs = np.asarray(regs_f32(st))
+    got = regs[np.arange(4) * 16, 3]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # non-lane0 threads untouched
+    assert (regs[1:16, 3] == 0).all()
+
+
+def test_sum_reduction():
+    sh = np.zeros(64, np.float32)
+    sh[:16] = np.linspace(1, 2, 16)
+    _, st = _run("""
+        TDX R1
+        LOD R2, (R1)+0
+        SUM.FP32 R3, R2, R2
+        STOP
+    """, shmem=sh)
+    got = float(np.asarray(regs_f32(st))[0, 3])
+    np.testing.assert_allclose(got, 2 * sh[:16].sum(), rtol=1e-6)
+
+
+def test_invsqr_sfu():
+    sh = np.zeros(64, np.float32)
+    sh[0] = 16.0
+    _, st = _run("""
+        LOD R1, (R0)+0 {w1,d1}
+        INVSQR.FP32 R2, R1 {w1,d1}
+        STOP
+    """, shmem=sh)
+    assert abs(float(np.asarray(regs_f32(st))[0, 2]) - 0.25) < 1e-7
+
+
+def test_thread_snooping_reads_other_wavefront():
+    _, st = _run("""
+        TDX R1
+        ADD.INT32 R2, R1@3, R1@3 {d1}
+        STOP
+    """, n_threads=64)
+    # wave-0 threads read R1 of wave 3 (threads 48..63), which hold TDX=tid
+    got = np.asarray(regs_i32(st))[:16, 2]
+    want = 2 * (np.arange(16) + 48)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# control flow
+# ---------------------------------------------------------------------------
+
+def test_nested_loops():
+    _, st = _run("""
+        LOD R1, #0
+        LOD R2, #1
+        INIT 3
+    outer:
+        INIT 4
+    inner:
+        ADD.INT32 R1, R1, R2
+        LOOP inner
+        LOOP outer
+        STOP
+    """)
+    assert int(np.asarray(regs_i32(st))[0, 1]) == 12
+
+
+def test_jsr_rts():
+    _, st = _run("""
+        LOD R1, #5
+        JSR sub
+        ADD.INT32 R1, R1, R1
+        STOP
+    sub:
+        ADD.INT32 R1, R1, R1
+        RTS
+    """)
+    assert int(np.asarray(regs_i32(st))[0, 1]) == 20
+
+
+def test_stop_halts_and_fuel_limits():
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=50)
+    st = run(cfg, assemble("top:\nJMP top"))
+    assert not bool(st.halted) and int(st.steps) == 50
+
+
+def test_runaway_pc_halts_on_stop_padding():
+    _, st = _run("NOP")  # falls through into STOP-padded I-MEM
+    assert bool(st.halted)
+
+
+# ---------------------------------------------------------------------------
+# multi-SM (quad-packed sector, §III.E)
+# ---------------------------------------------------------------------------
+
+def test_run_many_vmapped_sms():
+    n_sm = 4
+    shmems = np.zeros((n_sm, 64), np.float32)
+    shmems[:, :16] = np.arange(16) + np.arange(n_sm)[:, None]
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=100)
+    prog = assemble("""
+        TDX R1
+        LOD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        STO R3, (R1)+16
+        STOP
+    """)
+    states = run_many(cfg, prog, shmems)
+    out = np.asarray(shmem_f32(states.__class__(**{
+        k: getattr(states, k) for k in states.__dataclass_fields__})))
+    # shmem_f32 works per-instance via bitcast on the batch too
+    import jax
+    out = np.asarray(jax.lax.bitcast_convert_type(states.shmem, np.float32))
+    np.testing.assert_array_equal(out[:, 16:32], 2 * shmems[:, :16])
+    assert bool(states.halted.all())

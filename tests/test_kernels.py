@@ -1,0 +1,237 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _nan_aware_equal_u32(got, want):
+    """Bitwise equality, except NaN float payloads compare as equal."""
+    got_f = np.asarray(got).view(np.float32)
+    want_f = np.asarray(want).view(np.float32)
+    same_bits = np.asarray(got) == np.asarray(want)
+    both_nan = np.isnan(got_f) & np.isnan(want_f)
+    return bool(np.all(same_bits | both_nan))
+
+
+# ---------------------------------------------------------------------------
+# simt_alu
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", range(1, 10))
+@pytest.mark.parametrize("typ", range(3))
+def test_simt_alu_matches_ref(op, typ):
+    a = jnp.asarray(RNG.integers(0, 2**32, (8, 512), dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, (8, 512), dtype=np.uint32))
+    mask = jnp.asarray(RNG.integers(0, 2, (8, 512), dtype=np.uint32))
+    old = jnp.asarray(RNG.integers(0, 2**32, (8, 512), dtype=np.uint32))
+    got = ops.alu(op, typ, a, b, mask, old)
+    want = jnp.where(mask != 0,
+                     ref.alu_ref(jnp.int32(op), jnp.int32(typ), a, b), old)
+    assert _nan_aware_equal_u32(got, want), (op, typ)
+
+
+@pytest.mark.parametrize("n_sm,block", [(8, 8), (16, 8), (32, 16)])
+def test_simt_alu_blocking_sweep(n_sm, block):
+    a = jnp.asarray(RNG.integers(0, 2**10, (n_sm, 512), dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**10, (n_sm, 512), dtype=np.uint32))
+    mask = jnp.ones((n_sm, 512), jnp.uint32)
+    old = jnp.zeros((n_sm, 512), jnp.uint32)
+    got = ops.alu(1, 0, a, b, mask, old, block_sm=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a + b))
+
+
+def test_simt_alu_fp_exactness():
+    # FP32 results must be bit-exact IEEE754 ops
+    af = RNG.standard_normal((8, 512)).astype(np.float32)
+    bf = RNG.standard_normal((8, 512)).astype(np.float32)
+    a = jnp.asarray(af.view(np.uint32))
+    b = jnp.asarray(bf.view(np.uint32))
+    ones = jnp.ones((8, 512), jnp.uint32)
+    zeros = jnp.zeros((8, 512), jnp.uint32)
+    got = np.asarray(ops.alu(3, 2, a, b, ones, zeros)).view(np.float32)
+    np.testing.assert_array_equal(got, af * bf)
+
+
+# ---------------------------------------------------------------------------
+# wavefront_dot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [0, 1])
+@pytest.mark.parametrize("n_sm", [8, 24])
+def test_wavefront_dot_sweep(mode, n_sm):
+    a = jnp.asarray(RNG.standard_normal((n_sm, 512)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((n_sm, 512)), jnp.float32)
+    m = jnp.asarray(RNG.integers(0, 2, (n_sm, 512)), jnp.float32)
+    got = ops.dot(a, b, m, mode=mode)
+    if mode == 0:
+        want = ref.wavefront_dot_ref(a, b, m != 0)
+    else:
+        want = jnp.sum(jnp.where((m != 0).reshape(n_sm, 32, 16),
+                                 (a + b).reshape(n_sm, 32, 16), 0.0), -1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_wavefront_dot_flexible_width_mask():
+    # quarter-width wavefronts: only lanes 0..3 contribute
+    a = jnp.ones((8, 512), jnp.float32)
+    b = jnp.ones((8, 512), jnp.float32)
+    lane = np.tile(np.arange(16), 32 * 8).reshape(8, 512)
+    m = jnp.asarray((lane < 4).astype(np.float32))
+    got = ops.dot(a, b, m, mode=0)
+    np.testing.assert_array_equal(np.asarray(got), np.full((8, 32), 4.0))
+
+
+# ---------------------------------------------------------------------------
+# mgs_qrd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch,n", [(32, 16), (64, 16), (32, 8), (32, 32)])
+def test_mgs_qrd_sweep(batch, n):
+    a = jnp.asarray(RNG.standard_normal((batch, n, n)), jnp.float32)
+    q, r = ops.qrd(a, block_b=32)
+    qr, rr = ref.mgs_qrd_ref(a)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(rr), atol=2e-5)
+
+
+def test_mgs_qrd_factorization_properties():
+    a = jnp.asarray(RNG.standard_normal((32, 16, 16)), jnp.float32)
+    q, r = ops.qrd(a)
+    q, r = np.asarray(q), np.asarray(r)
+    recon = np.einsum("bij,bjk->bik", q, r)
+    np.testing.assert_allclose(recon, np.asarray(a), atol=5e-5)
+    eye = np.eye(16)
+    for i in range(32):
+        np.testing.assert_allclose(q[i].T @ q[i], eye, atol=5e-5)
+        assert np.abs(np.tril(r[i], -1)).max() < 1e-5
+
+
+def test_mgs_qrd_agrees_with_iss():
+    """Cross-layer: the Pallas kernel vs the eGPU ISS running the paper's
+    assembly — two totally different implementations of §IV.B."""
+    from repro.core.programs.qrd import run_qrd
+
+    a = RNG.standard_normal((16, 16)).astype(np.float32)
+    q_iss, r_iss, _ = run_qrd(a)
+    q_k, r_k = ops.qrd(jnp.asarray(a)[None].repeat(32, 0), block_b=32)
+    np.testing.assert_allclose(np.asarray(q_k)[0], q_iss, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(r_k)[0], r_iss, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fft_r2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [32, 64, 256, 1024])
+def test_fft_r2_sweep(n):
+    re = jnp.asarray(RNG.standard_normal((8, n)), jnp.float32)
+    im = jnp.asarray(RNG.standard_normal((8, n)), jnp.float32)
+    orr, oi = ops.fft(re, im)
+    wr, wi = ref.fft_r2_ref(re, im)
+    scale = np.abs(np.asarray(wr)).max()
+    np.testing.assert_allclose(np.asarray(orr), np.asarray(wr), atol=3e-5 * scale)
+    np.testing.assert_allclose(np.asarray(oi), np.asarray(wi), atol=3e-5 * scale)
+
+
+def test_fft_r2_bitreversed_mode():
+    re = jnp.asarray(RNG.standard_normal((8, 64)), jnp.float32)
+    im = jnp.zeros((8, 64), jnp.float32)
+    orr, oi = ops.fft(re, im, natural=False)
+    wr, wi = ref.fft_r2_ref_br(re, im)
+    np.testing.assert_allclose(np.asarray(orr), np.asarray(wr), atol=1e-4)
+
+
+def test_fft_r2_agrees_with_iss():
+    """Cross-layer: Pallas kernel vs eGPU ISS assembly FFT."""
+    from repro.core.programs.fft import run_fft
+
+    x = (RNG.standard_normal(256) + 1j * RNG.standard_normal(256)).astype(np.complex64)
+    x_iss, _ = run_fft(x)
+    orr, oi = ops.fft(jnp.asarray(np.real(x))[None], jnp.asarray(np.imag(x))[None])
+    got = np.asarray(orr)[0] + 1j * np.asarray(oi)[0]
+    np.testing.assert_allclose(got, x_iss, atol=1e-4 * np.abs(x_iss).max())
+
+
+@settings(max_examples=20, deadline=None)
+@given(logn=st.integers(4, 9), seed=st.integers(0, 2**31 - 1))
+def test_fft_r2_linearity_property(logn, seed):
+    # FFT(a x + b y) == a FFT(x) + b FFT(y)
+    n = 1 << logn
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((8, n)).astype(np.float32)
+    y = r.standard_normal((8, n)).astype(np.float32)
+    z = jnp.zeros((8, n), jnp.float32)
+    fx = ops.fft(jnp.asarray(x), z)[0]
+    fy = ops.fft(jnp.asarray(y), z)[0]
+    fxy = ops.fft(jnp.asarray(2 * x + 3 * y), z)[0]
+    np.testing.assert_allclose(np.asarray(fxy), 2 * np.asarray(fx) + 3 * np.asarray(fy),
+                               atol=1e-3 * np.abs(np.asarray(fxy)).max())
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,blk", [(256, 64, 64), (512, 128, 128),
+                                     (256, 64, 32)])
+def test_flash_attention_sweep(s, d, blk):
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+
+    q = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
+    got = flash_attention(q, k, v, blk_q=blk, blk_k=blk)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+
+    q = jnp.asarray(RNG.standard_normal((4, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((4, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((4, 128, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, blk_q=64, blk_k=64)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_matches_model_attention():
+    """Cross-layer: the Pallas kernel vs the model's blocked jnp attention
+    (GQA folded to MHA) — the §Perf cell-C deployment path."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import attention, attn_params
+
+    cfg = dataclasses.replace(get_arch("yi-6b", smoke=True),
+                              n_kv_heads=4)  # MHA for direct folding
+    p = attn_params(jax.random.PRNGKey(0), cfg.d_model, cfg.n_heads,
+                    cfg.n_kv_heads, cfg.head_dim, jnp.float32)
+    B, S = 2, 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ref_out, (kk, vv) = attention(p, x, pos, cfg)
+
+    from repro.models.layers import apply_rope
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * cfg.n_heads, S, cfg.head_dim)
+    kf = kk.transpose(0, 2, 1, 3).reshape(B * cfg.n_heads, S, cfg.head_dim)
+    vf = vv.transpose(0, 2, 1, 3).reshape(B * cfg.n_heads, S, cfg.head_dim)
+    o = flash_attention(qf, kf, vf, blk_q=32, blk_k=32)
+    o = o.reshape(B, cfg.n_heads, S, cfg.head_dim).transpose(0, 2, 1, 3)
+    got = o.reshape(B, S, -1) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref_out),
+                               atol=3e-5)

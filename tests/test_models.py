@@ -1,0 +1,290 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on CPU)
++ model-math unit tests (SSD recurrence, RG-LRU, MoE router, attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_batch(cfg, B=2, S=32):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.num_image_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(name):
+    """One forward + one SGD step on the reduced config: shapes + no NaNs."""
+    cfg = get_arch(name, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _smoke_batch(cfg)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), name
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 2.5 * np.log(cfg.vocab_size)
+
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, batch)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves), name
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves), name
+    # gradient step reduces loss on the same batch
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2, _ = jax.jit(model.loss)(params2, batch)
+    assert float(loss2) < float(loss), (name, float(loss), float(loss2))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_decode_step(name):
+    cfg = get_arch(name, smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B = 2
+    caches = model.init_decode_caches(B, 64)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, caches2 = jax.jit(model.decode_step)(params, caches, tok,
+                                                 jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # a second step with the updated cache
+    logits2, _ = jax.jit(model.decode_step)(params, caches2, tok, jnp.int32(1))
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("name", ["yi-6b", "deepseek-moe-16b", "mamba2-780m",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_full_forward(name):
+    cfg = get_arch(name, smoke=True)
+    if cfg.n_experts:
+        # dropless capacity: capacity-overflow drops are batch-size dependent
+        # (a real MoE semantic, not a bug), so disable them for this check
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    full = jax.jit(model.forward)(params, batch)
+    caches = model.init_decode_caches(B, S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, caches = step(params, caches, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=5e-5)
+
+
+def test_full_configs_have_exact_published_dims():
+    a = ARCHS
+    assert (a["mamba2-780m"].n_layers, a["mamba2-780m"].d_model,
+            a["mamba2-780m"].ssm_state, a["mamba2-780m"].vocab_size) \
+        == (48, 1536, 128, 50280)
+    assert (a["internvl2-76b"].n_layers, a["internvl2-76b"].d_model,
+            a["internvl2-76b"].n_heads, a["internvl2-76b"].n_kv_heads,
+            a["internvl2-76b"].d_ff, a["internvl2-76b"].vocab_size) \
+        == (80, 8192, 64, 8, 28672, 128256)
+    assert (a["yi-6b"].n_layers, a["yi-6b"].d_model, a["yi-6b"].n_kv_heads,
+            a["yi-6b"].d_ff, a["yi-6b"].vocab_size) \
+        == (32, 4096, 4, 11008, 64000)
+    assert (a["qwen1.5-32b"].n_layers, a["qwen1.5-32b"].d_model,
+            a["qwen1.5-32b"].n_kv_heads, a["qwen1.5-32b"].d_ff,
+            a["qwen1.5-32b"].qkv_bias) == (64, 5120, 40, 27392, True)
+    assert (a["granite-3-2b"].n_layers, a["granite-3-2b"].d_model,
+            a["granite-3-2b"].n_kv_heads, a["granite-3-2b"].vocab_size) \
+        == (40, 2048, 8, 49155)
+    assert (a["qwen2.5-32b"].n_layers, a["qwen2.5-32b"].d_ff,
+            a["qwen2.5-32b"].n_kv_heads) == (64, 27648, 8)
+    assert (a["phi3.5-moe-42b-a6.6b"].n_experts,
+            a["phi3.5-moe-42b-a6.6b"].top_k,
+            a["phi3.5-moe-42b-a6.6b"].d_ff) == (16, 2, 6400)
+    assert (a["deepseek-moe-16b"].n_experts, a["deepseek-moe-16b"].top_k,
+            a["deepseek-moe-16b"].n_shared_experts,
+            a["deepseek-moe-16b"].d_ff) == (64, 6, 2, 1408)
+    assert (a["recurrentgemma-2b"].block_pattern,
+            a["recurrentgemma-2b"].window,
+            a["recurrentgemma-2b"].vocab_size) \
+        == (("rec", "rec", "attn"), 2048, 256000)
+    assert (a["whisper-tiny"].encoder_layers, a["whisper-tiny"].d_model,
+            a["whisper-tiny"].vocab_size) == (4, 384, 51865)
+
+
+def test_vocab_padding_divisible_by_tp16():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % 16 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_long_context_skip_rules():
+    shape = SHAPES["long_500k"]
+    runnable = {n for n, c in ARCHS.items()
+                if shape_applicable(c, shape)[0]}
+    assert runnable == {"mamba2-780m", "recurrentgemma-2b"}
+    for n, c in ARCHS.items():
+        ok, why = shape_applicable(c, SHAPES["train_4k"])
+        assert ok, (n, why)
+
+
+# ---------------------------------------------------------------------------
+# layer math
+# ---------------------------------------------------------------------------
+
+def test_ssd_matches_naive_recurrence():
+    from repro.models.ssm import ssd_scan
+
+    cfg = dataclasses.replace(get_arch("mamba2-780m", smoke=True), ssm_chunk=16)
+    rng = np.random.default_rng(0)
+    b, L, H, P = 2, 64, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    x = jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, L, H)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, L, G, N)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, L, G, N)) * 0.3, jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 1, (H,)), jnp.float32)
+    y, hT = ssd_scan(cfg, x, dt, B, C, a_log)
+
+    A = -np.exp(np.asarray(a_log))
+    rep = H // G
+    h = np.zeros((b, H, P, N))
+    Br = np.repeat(np.asarray(B), rep, axis=2)
+    Cr = np.repeat(np.asarray(C), rep, axis=2)
+    xn, dtn = np.asarray(x, np.float64), np.asarray(dt, np.float64)
+    for t in range(L):
+        dA = np.exp(dtn[:, t] * A[None])
+        h = h * dA[..., None, None] \
+            + (dtn[:, t][..., None] * xn[:, t])[..., None] * Br[:, t][:, :, None, :]
+        np.testing.assert_allclose(np.asarray(y)[:, t],
+                                   np.einsum("bhpn,bhn->bhp", h, Cr[:, t]),
+                                   atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), h, atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    from repro.models.ssm import ssd_scan
+
+    cfg = get_arch("mamba2-780m", smoke=True)
+    rng = np.random.default_rng(1)
+    b, L, H, P = 1, 64, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    args = (jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32),
+            jnp.asarray(rng.uniform(0.01, 0.2, (b, L, H)), jnp.float32),
+            jnp.asarray(rng.standard_normal((b, L, G, N)) * .3, jnp.float32),
+            jnp.asarray(rng.standard_normal((b, L, G, N)) * .3, jnp.float32),
+            jnp.asarray(rng.uniform(-1, 1, (H,)), jnp.float32))
+    y16, _ = ssd_scan(dataclasses.replace(cfg, ssm_chunk=16), *args)
+    y64, _ = ssd_scan(dataclasses.replace(cfg, ssm_chunk=64), *args)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), atol=1e-5)
+
+
+def test_rglru_scan_matches_step():
+    from repro.models.rglru import rglru, rglru_params, rglru_step
+
+    cfg = get_arch("recurrentgemma-2b", smoke=True)
+    p = rglru_params(KEY, cfg, jnp.float32)
+    x = 0.5 * jax.random.normal(KEY, (2, 16, cfg.lru_width))
+    y_scan, h_last = rglru(p, x)
+    h = jnp.zeros((2, cfg.lru_width))
+    ys = []
+    for t in range(16):
+        yt, h = rglru_step(p, x[:, t:t + 1], h)
+        ys.append(yt[:, 0])
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h), atol=1e-5)
+
+
+def test_rglru_stability():
+    # |a| < 1 by construction: long inputs cannot blow up
+    from repro.models.rglru import rglru, rglru_params
+
+    cfg = get_arch("recurrentgemma-2b", smoke=True)
+    p = rglru_params(KEY, cfg, jnp.float32)
+    x = jnp.ones((1, 2048, cfg.lru_width))
+    y, h = rglru(p, x)
+    assert bool(jnp.isfinite(y).all()) and float(jnp.abs(h).max()) < 1e3
+
+
+def test_moe_router_invariants():
+    from repro.models.moe import route_topk
+
+    rng = np.random.default_rng(2)
+    T, E, k, C = 128, 8, 2, 48
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    plan = route_topk(logits, k, C)
+    st = np.asarray(plan["slot_token"])
+    keep = np.asarray(plan["keep"])
+    expert = np.asarray(plan["expert"])
+    slot = np.asarray(plan["slot"])
+    gate = np.asarray(plan["gate"])
+    # slot table is consistent: every kept (token, choice) appears at its
+    # (expert, slot) and nowhere else
+    for t in range(T):
+        for j in range(k):
+            if keep[t, j]:
+                assert st[expert[t, j], slot[t, j]] == t
+    # occupied slots are unique tokens; empty slots are -1
+    occ = st[st >= 0]
+    assert len(occ) == keep.sum()
+    assert (slot[keep] < C).all()
+    # gates renormalized over the k picks
+    np.testing.assert_allclose(gate.sum(-1), 1.0, atol=1e-5)
+    assert float(plan["aux"]) > 0
+    # with ample capacity every token is fully routed
+    plan2 = route_topk(logits, k, T * k)
+    assert bool(np.asarray(plan2["keep"]).all())
+
+
+def test_moe_capacity_drops_overflow():
+    from repro.models.moe import route_topk
+
+    # all tokens want expert 0 -> only `capacity` of them get slots
+    logits = jnp.tile(jnp.asarray([[10.0, 0, 0, 0]]), (64, 1))
+    C = 8
+    plan = route_topk(logits, 1, C)
+    assert int(np.asarray(plan["keep"]).sum()) == C
+    # priority order: the first C tokens win their slots
+    assert bool(np.asarray(plan["keep"])[:C].all())
+
+
+def test_attention_causality():
+    from repro.models.attention import attention, attn_params
+
+    cfg = get_arch("yi-6b", smoke=True)
+    p = attn_params(KEY, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.head_dim, jnp.float32)
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model))
+    pos = jnp.arange(16)[None]
+    y1, _ = attention(p, x, pos, cfg)
+    x2 = x.at[:, 10:].set(0.0)  # future perturbation
+    y2, _ = attention(p, x2, pos, cfg)
+    np.testing.assert_allclose(np.asarray(y1[:, :10]), np.asarray(y2[:, :10]),
+                               atol=1e-5)
+
+
+def test_local_window_attention_band():
+    from repro.models.attention import attention, attn_params
+
+    cfg = get_arch("recurrentgemma-2b", smoke=True)
+    p = attn_params(KEY, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.head_dim, jnp.float32)
+    x = jax.random.normal(KEY, (1, 128, cfg.d_model))
+    pos = jnp.arange(128)[None]
+    y1, _ = attention(p, x, pos, cfg, window=cfg.window)
+    # perturbing a token outside the window of position 127 changes nothing
+    x2 = x.at[:, 0].set(0.0)
+    y2, _ = attention(p, x2, pos, cfg, window=cfg.window)
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               atol=1e-5)

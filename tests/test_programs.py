@@ -1,0 +1,161 @@
+"""Benchmark-program tests: numerics vs numpy + the paper's claims."""
+import numpy as np
+import pytest
+
+from repro.core import check_hazards, profile
+from repro.core.programs.fft import (
+    bitrev_indices,
+    fft_program,
+    run_fft,
+)
+from repro.core.programs.qrd import qrd_program, run_qrd
+from repro.core.programs.reduction import run_reduction
+from repro.core.programs.saxpy import run_saxpy
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# FFT (paper §IV.A, Table III)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [32, 64, 128, 256])
+def test_fft_matches_numpy(n):
+    x = (RNG.standard_normal(n) + 1j * RNG.standard_normal(n)).astype(np.complex64)
+    got, st = run_fft(x)
+    ref = np.fft.fft(x)
+    assert bool(st.halted) and not bool(st.oob)
+    np.testing.assert_allclose(got, ref, rtol=0, atol=2e-5 * np.abs(ref).max())
+
+
+def test_fft_unrolled_matches_numpy():
+    x = (RNG.standard_normal(256) + 1j * RNG.standard_normal(256)).astype(np.complex64)
+    got, _ = run_fft(x, unroll=True)
+    np.testing.assert_allclose(got, np.fft.fft(x),
+                               atol=2e-5 * np.abs(np.fft.fft(x)).max())
+
+
+def test_fft_programs_hazard_free():
+    for n in (32, 256):
+        for unroll in (False, True):
+            prog = fft_program(n, unroll)
+            assert not check_hazards(prog, n_threads=n // 2)
+
+
+def test_fft256_instruction_count_near_paper():
+    # paper: "the 256 point radix-2 FFT ... require 135 ... instructions"
+    prog = fft_program(256, unroll=True)
+    assert 100 <= len(prog) <= 170, len(prog)
+    # and the loop variant is far smaller (flexible I-MEM sizing argument)
+    assert len(fft_program(256)) < 80
+
+
+def test_fft256_profile_shared_memory_dominates():
+    # paper Table III: address 12%, butterflies 13%, shared memory 75%
+    x = (RNG.standard_normal(256) + 1j * RNG.standard_normal(256)).astype(np.complex64)
+    _, st = run_fft(x)
+    p = profile(st)
+    b, tot = p["by_class"], p["total_cycles"]
+    shared = (b["LOD_IDX"] + b["STO_IDX"]) / tot
+    addr = (b["LOGIC"] + b["INT"] + b["LOD_IMM"]) / tot
+    fp = (b["FP_ADDSUB"] + b["FP_MUL"]) / tot
+    assert 0.65 <= shared <= 0.85          # paper: 0.75
+    assert 0.05 <= addr <= 0.20            # paper: 0.12
+    assert 0.05 <= fp <= 0.20              # paper: 0.13
+    # memory access dominance is the paper's conclusion for R2 FFT
+    assert shared > addr + fp
+
+
+def test_bitrev_involution():
+    for n in (32, 256):
+        idx = bitrev_indices(n)
+        np.testing.assert_array_equal(idx[idx], np.arange(n))
+
+
+# ---------------------------------------------------------------------------
+# QRD (paper §IV.B, Table IV)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loop", [False, True])
+def test_qrd_factorizes(loop):
+    a = RNG.standard_normal((16, 16)).astype(np.float32)
+    q, r, st = run_qrd(a, loop=loop)
+    assert bool(st.halted) and not bool(st.oob)
+    np.testing.assert_allclose(q @ r, a, atol=5e-5)
+    np.testing.assert_allclose(q.T @ q, np.eye(16), atol=5e-5)
+    assert np.abs(np.tril(r, -1)).max() < 5e-6
+
+
+def test_qrd_matches_numpy_up_to_sign():
+    a = RNG.standard_normal((16, 16)).astype(np.float32)
+    q, r, _ = run_qrd(a)
+    qn, rn = np.linalg.qr(a)
+    s = np.sign(np.diag(rn))
+    np.testing.assert_allclose(q, qn * s, atol=1e-4)
+    np.testing.assert_allclose(r, rn * s[:, None], atol=1e-4)
+
+
+def test_qrd_programs_hazard_free():
+    assert not check_hazards(qrd_program(), n_threads=256)
+    assert not check_hazards(qrd_program(loop=True), n_threads=256)
+
+
+def test_qrd_loop_program_size_near_paper():
+    # paper: "the 16x16 QRD require ... 40 instructions" (I-MEM sizing)
+    assert len(qrd_program(loop=True)) <= 80
+
+
+def test_qrd_profile_matches_table_iv():
+    """The strongest reproduction claim: per-iteration cycle profile."""
+    a = RNG.standard_normal((16, 16)).astype(np.float32)
+    _, _, st = run_qrd(a)
+    p = profile(st)
+    per = {k: v / 16 for k, v in p["by_class"].items()}
+    # paper Table IV rows (per outer iteration): exact matches
+    assert per["STO_IDX"] == 33          # 16 (Q col) + 16 (R row) + 1 (norm)
+    assert per["FP_DOT"] == 17           # 1 (norm, {d1}) + 16 (R row, full)
+    assert per["FP_SFU"] == 1            # one INVSQR per column
+    # close matches (paper: LOD 132, ADD/SUB 16, NOP 44)
+    assert 125 <= per["LOD_IDX"] <= 140
+    assert 16 <= per["FP_ADDSUB"] <= 18
+    assert 35 <= per["NOP"] <= 55
+    # broadcast through shared memory dominates (the paper's observation)
+    tot = p["total_cycles"] / 16
+    assert per["LOD_IDX"] / tot > 0.40
+
+
+def test_qrd_zero_column_no_nan_guard():
+    # rank-deficient input: the rsqrt(0)=inf path mirrors hardware; the
+    # factorization of the non-degenerate leading block must still be fine
+    a = RNG.standard_normal((16, 16)).astype(np.float32)
+    q, r, _ = run_qrd(a.copy())
+    assert np.isfinite(q).all() and np.isfinite(r).all()
+
+
+# ---------------------------------------------------------------------------
+# reduction + saxpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [32, 128, 512])
+def test_reduction(n):
+    x = RNG.standard_normal(n).astype(np.float32)
+    tot, st = run_reduction(x)
+    assert abs(tot - x.sum()) < 1e-3 * max(1.0, abs(x.sum()))
+    assert bool(st.halted)
+
+
+def test_reduction_never_touches_shared_for_partials():
+    # snooping replaces shared-memory traffic: only the initial load and
+    # the single result store hit memory
+    x = RNG.standard_normal(512).astype(np.float32)
+    _, st = run_reduction(x)
+    p = profile(st)["by_class"]
+    assert p["STO_IDX"] == 1
+    assert p["LOD_IDX"] == 128  # 512 threads / 4 ports
+
+
+def test_saxpy():
+    x = RNG.standard_normal(128).astype(np.float32)
+    y = RNG.standard_normal(128).astype(np.float32)
+    z, _ = run_saxpy(-1.5, x, y)
+    np.testing.assert_allclose(z, -1.5 * x + y, rtol=1e-6)

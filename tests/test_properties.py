@@ -1,0 +1,127 @@
+"""System-invariant property tests (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SMConfig, assemble, run
+from repro.core.assembler import Program
+from repro.core.cycles import instr_cycles
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+
+KEY = jax.random.PRNGKey(0)
+
+_SAFE_OPS = [Op.ADD, Op.SUB, Op.MUL, Op.AND, Op.OR, Op.XOR, Op.NOT,
+             Op.LSL, Op.LSR, Op.LODI, Op.TDX, Op.TDY, Op.DOT, Op.SUM,
+             Op.NOP, Op.LOD, Op.STO]
+
+
+@st.composite
+def straightline_program(draw):
+    n = draw(st.integers(1, 12))
+    instrs = []
+    for _ in range(n):
+        op = draw(st.sampled_from(_SAFE_OPS))
+        ins = Instr(
+            op=op,
+            typ=draw(st.sampled_from(list(Typ))),
+            rd=draw(st.integers(0, 15)),
+            ra=draw(st.integers(0, 15)),
+            rb=draw(st.integers(0, 15)),
+            imm=draw(st.integers(0, 31)) if op in (Op.LOD, Op.STO, Op.LODI)
+            else 0,
+            width=draw(st.sampled_from(list(Width))),
+            depth=draw(st.sampled_from(list(Depth))),
+        )
+        instrs.append(ins)
+    instrs.append(Instr(op=Op.STOP))
+    return instrs
+
+
+@settings(max_examples=25, deadline=None)
+@given(instrs=straightline_program(), n_threads=st.sampled_from([16, 64, 256]))
+def test_iss_cycles_match_cost_model(instrs, n_threads):
+    """The executed cycle count equals the static cost model, always."""
+    words = np.array([i.encode() for i in instrs], dtype=np.int64)
+    cfg = SMConfig(n_threads=n_threads, dim_x=n_threads, shmem_depth=64,
+                   max_steps=100)
+    state = run(cfg, words)
+    want = sum(instr_cycles(i, n_threads) for i in instrs)
+    assert int(state.cycles) == want
+    assert bool(state.halted)
+    assert int(state.steps) == len(instrs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), width=st.sampled_from(list(Width)),
+       depth=st.sampled_from(list(Depth)))
+def test_flexible_mask_never_touches_inactive_threads(seed, width, depth):
+    """Any op at any width/depth leaves inactive threads' registers as-is."""
+    n_threads = 128
+    ins = Instr(op=Op.LODI, rd=3, imm=7, width=width, depth=depth)
+    words = np.array([ins.encode(), Instr(op=Op.STOP).encode()], np.int64)
+    cfg = SMConfig(n_threads=n_threads, dim_x=n_threads, shmem_depth=64,
+                   max_steps=10)
+    state = run(cfg, words)
+    regs = np.asarray(state.regs)[:, 3]
+    wt = {Width.FULL: 16, Width.HALF: 8, Width.QUARTER: 4, Width.SINGLE: 1}[width]
+    n_waves = n_threads // 16
+    dw = {Depth.FULL: n_waves, Depth.HALF: max(1, n_waves // 2),
+          Depth.QUARTER: max(1, n_waves // 4), Depth.SINGLE: 1}[depth]
+    for t in range(512):
+        active = (t % 16 < wt) and (t // 16 < dw) and t < n_threads
+        assert regs[t] == (7 if active else 0), (t, width, depth)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_checkpoint_roundtrip_property(seed, tmp_path_factory):
+    from repro.checkpoint import ckpt
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((rng.integers(1, 8),
+                                              rng.integers(1, 8)))),
+        "b": [jnp.asarray(rng.integers(0, 100, 5), jnp.int32)],
+        "c": {"d": jnp.asarray(rng.standard_normal(3), jnp.bfloat16)},
+    }
+    d = tmp_path_factory.mktemp("ck")
+    ckpt.save(str(d), 1, tree)
+    got, _ = ckpt.restore(str(d), tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+
+
+def test_engine_serves_ssm_arch():
+    """The serving engine works for state-space (cache-free attention)
+    models too — recurrent state splicing."""
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import Engine, Request
+
+    cfg = get_arch("mamba2-780m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, params, max_slots=2, capacity=64)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8),
+                       max_new_tokens=5))
+    eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4),
+                       max_new_tokens=3))
+    outs = eng.run_until_done()
+    assert len(outs[0]) == 6 and len(outs[1]) == 4
+    assert all(0 <= t for v in outs.values() for t in v)
+
+
+def test_data_pipeline_seed_isolation():
+    from repro.data import PipelineSpec
+
+    a = PipelineSpec(vocab=64, seq_len=16, global_batch=4, seed=1)
+    b = PipelineSpec(vocab=64, seq_len=16, global_batch=4, seed=2)
+    assert not np.array_equal(a.batch_at(0), b.batch_at(0))

@@ -1,0 +1,63 @@
+"""Analytical resource/Fmax model vs the paper's published numbers."""
+from repro.core import resources as R
+from repro.core.machine import SMConfig
+
+
+def test_table_v_verbatim():
+    t = R.table_v()
+    assert (t["SM"].alms, t["SM"].registers, t["SM"].dsps, t["SM"].m20ks) \
+        == (5372, 14996, 24, 48)
+    assert (t["SP"].alms, t["SP"].dsps, t["SP"].m20ks) == (267, 1.5, 2)
+    assert (t["INT ALU"].alms, t["INT ALU"].dsps) == (114, 0.5)
+    assert (t["Instruction"].alms, t["Instruction"].m20ks) == (235, 2)
+
+
+def test_table_i_comparison():
+    t = R.table_i()
+    # eGPU is ~an order of magnitude smaller than FlexGrip and ~8x faster
+    assert t["eGPU"]["alm"] < t["FlexGrip"]["alm"] / 10
+    assert t["eGPU"]["fmax_mhz"] > 7 * t["FlexGrip"]["fmax_mhz"]
+    assert t["eGPU"]["fmax_mhz"] > 3 * t["FGPU"]["fmax_mhz"]
+    assert t["eGPU"]["dsp"] == 24
+    assert t["eGPU"]["fmax_mhz"] == 771
+
+
+def test_fmax_model():
+    assert R.fmax_mhz(1) == 771.0
+    assert R.fmax_mhz(1, use_dsp_fp32=False) == 831.0
+    assert abs(R.fmax_mhz(4) - 738.0) < 1.0      # quad packing ~5% derate
+
+
+def test_sector_packing_matches_paper():
+    """§III.E arithmetic: 4 SMs/sector, 27 shared M20Ks, 16 dot DSPs,
+    4100 ALM budget, 3K-word (12KB) shared memory."""
+    p = R.pack_sector(4)
+    assert p.regfile_m20ks == 128
+    assert p.dsps_for_sms == 96
+    assert p.m20ks_left == 109
+    assert p.shared_copies_per_egpu == 27
+    assert p.shared_depth_words == 3072
+    assert p.shared_bytes == 12 * 1024
+    assert p.dsps_left == 68
+    assert p.dot_dsps_per_egpu == 16  # paper: 17 remain, dot core uses 16
+    assert p.alm_budget_per_egpu == 4100
+
+
+def test_sm_report_scales_with_config():
+    base = R.sm_report(SMConfig())
+    small = R.sm_report(SMConfig(shmem_depth=512, with_dot=False))
+    assert small.m20ks < base.m20ks
+    assert small.dsps == base.dsps - R.DOT_UNIT_DSP
+
+
+def test_quad_read_port_costs_four_copies():
+    # paper §III.A: 4 read ports => 4 identical copies of the array
+    assert R.shared_memory_m20ks(512) == 4
+    assert R.shared_memory_m20ks(3072) == 24
+
+
+def test_peak_gflops():
+    # 16 SPs * 2 flops + 31-flop dot unit at 771 MHz
+    g = R.peak_gflops(1)
+    assert abs(g - (32 + 31) * 0.771) < 1e-6
+    assert R.peak_gflops(4) > 3.5 * R.peak_gflops(1) * R.QUAD_PACK_DERATE / 1.01
