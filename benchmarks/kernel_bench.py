@@ -17,6 +17,29 @@ from .common import emit, time_fn
 RNG = np.random.default_rng(0)
 
 
+def run_device_launch():
+    """Device-layer launch throughput: a grid SAXPY through both execute
+    backends. The Pallas backend runs each multi-SM step as ONE simt_alu
+    grid over the wave's SM batch (interpreted here; compiled on TPU)."""
+    from repro.core import DeviceConfig, SMConfig
+    from repro.core.programs.saxpy import launch_saxpy
+
+    n, block = 2048, 512
+    x = RNG.standard_normal(n).astype(np.float32)
+    y = RNG.standard_normal(n).astype(np.float32)
+    dcfg = DeviceConfig(n_sms=4, global_mem_depth=3 * n + 16,
+                        sm=SMConfig(max_steps=10_000))
+    for backend in ("inline", "pallas"):
+        z, res = launch_saxpy(2.0, x, y, device=dcfg, block=block,
+                              backend=backend)
+        t = time_fn(lambda b=backend: launch_saxpy(2.0, x, y, device=dcfg,
+                                                   block=block, backend=b),
+                    warmup=1, iters=1)
+        emit(f"device_launch_saxpy_{backend}", t,
+             f"grid={n // block} block={block} n_sms=4 waves={res.n_waves} "
+             f"cycles={res.cycles} exact={np.allclose(z, 2 * x + y)}")
+
+
 def run():
     # simt_alu: 16 SMs x 512 threads
     a = jnp.asarray(RNG.integers(0, 2**31, (16, 512), dtype=np.uint32))
@@ -49,6 +72,8 @@ def run():
     emit("kernel_flash_attention", t,
          "bh=4 s=256 d=64 online_softmax s2_tiles_in_VMEM_only=yes "
          "(deploys the SPerf cell-C blocking win)")
+
+    run_device_launch()
 
 
 if __name__ == "__main__":

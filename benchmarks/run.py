@@ -1,6 +1,10 @@
 """Benchmark harness: one function per paper table + kernels + roofline.
 
 Prints ``name,us_per_call,derived`` CSV lines.
+
+``--smoke`` runs a fast CI-friendly probe: every benchmark module is
+imported (so entry points can't silently rot), the cheap analytic tables
+run in full, and the expensive ISS/kernel benches run one minimal case.
 """
 from __future__ import annotations
 
@@ -20,5 +24,38 @@ def main() -> None:
     roofline_bench.run()
 
 
+def smoke() -> None:
+    # importing every module is the point: a bitrotted benchmark fails here
+    from . import (kernel_bench, roofline_bench, table1_resources,  # noqa: F401
+                   table3_fft, table4_qrd, table5_resources)
+    import numpy as np
+
+    print("name,us_per_call,derived")
+    table1_resources.run()
+    table5_resources.run()
+    # one minimal ISS case: FFT-32 profile
+    derived, cycles = table3_fft._profile_line(32)
+    print(f"smoke_fft32,0.0,{derived}")
+    assert cycles > 0
+    # one minimal device-layer launch through both execute backends
+    from repro.core import DeviceConfig, SMConfig
+    from repro.core.programs.saxpy import launch_saxpy
+
+    x = np.arange(32, dtype=np.float32)
+    y = np.ones(32, np.float32)
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=128,
+                        sm=SMConfig(max_steps=1000))
+    for backend in ("inline", "pallas"):
+        z, res = launch_saxpy(3.0, x, y, device=dcfg, block=16,
+                              backend=backend)
+        assert np.allclose(z, 3.0 * x + y), backend
+        print(f"smoke_launch_{backend},0.0,waves={res.n_waves} "
+              f"cycles={res.cycles}")
+    print("smoke_ok,0.0,all benchmark entry points importable")
+
+
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

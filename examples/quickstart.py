@@ -1,90 +1,78 @@
-"""Quickstart: write eGPU assembly, run it on the ISS, read the profile.
+"""Quickstart: write eGPU assembly, launch it on the multi-SM device, read
+the aggregate profile.
 
     PYTHONPATH=src python examples/quickstart.py
+
+A CUDA-style launch: the grid's thread blocks are scheduled onto the
+device's SMs in waves (blocks beyond ``n_sms`` queue for the next round).
+Each block owns a private shared memory; all blocks share one global-memory
+segment through GLD/GST, and BID gives a block its grid index.
 """
 import numpy as np
 
-from repro.core import SMConfig, assemble, check_hazards, profile, run, shmem_f32
+from repro.core import (
+    DeviceConfig,
+    SMConfig,
+    assemble,
+    check_hazards,
+    launch,
+)
+from repro.core.assembler import auto_nop
 
-# axpy with a wavefront reduction at the end: z = 2x + y; s = sum(z)
-ASM = """
-    TDX R1                   // thread id
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    LOD R2, (R1)+0           // x[tid]
-    LOD R3, (R1)+64          // y[tid]
-    LOD.FP32 R4, #2          // alpha = 2.0
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
+N_BLOCKS = 4      # grid size: 4 thread blocks ...
+N_SMS = 2         # ... on a 2-SM device => 2 scheduling waves
+BLOCK = 32        # threads per block
+N = N_BLOCKS * BLOCK
+
+# z = 2x + y over global memory, one element per thread; each block also
+# folds its chunk with the wavefront SUM unit + thread snooping and commits
+# the partial with the paper's single-cycle {w1,d1} store.
+ASM = f"""
+    BID R7                    // block index
+    TDX R1                    // thread index within the block
+    LOD R8, #{BLOCK}
+    MUL.INT32 R9, R7, R8
+    ADD.INT32 R1, R9, R1      // gid = bid*block + tid
+    GLD R2, (R1)+0            // x[gid]
+    GLD R3, (R1)+{N}          // y[gid]
+    LOD.FP32 R4, #2           // alpha = 2.0
     MUL.FP32 R5, R2, R4
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
     ADD.FP32 R6, R5, R3
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    STO R6, (R1)+128         // z back to shared
-    SUM.FP32 R7, R6, R0      // per-wavefront sums -> lane 0
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    ADD.FP32 R8, R7@0, R7@1 {w1,d1}   // thread snooping: fold 2 wavefronts
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    NOP
-    STO R8, (R0)+192 {w1,d1}          // single-cycle store (flexible ISA)
+    GST R6, (R1)+{2 * N}      // z[gid] back to global
+    SUM.FP32 R10, R6, R0      // per-wavefront sums -> lane 0
+    ADD.FP32 R11, R10@0, R10@1 {{w1,d1}}  // snoop: fold the 2 wavefronts
+    GST R11, (R7)+{3 * N} {{w1,d1}}       // single-cycle partial store
     STOP
 """
 
 
 def main():
-    cfg = SMConfig(n_threads=32, dim_x=32, shmem_depth=256, max_steps=1000)
-    prog = assemble(ASM)
+    text = auto_nop(ASM, n_threads=BLOCK)  # pad the 9-cycle RAW windows
+    prog = assemble(text)
     print(f"program: {len(prog)} words; hazards:",
-          check_hazards(prog, cfg.n_threads) or "none")
+          check_hazards(prog, BLOCK) or "none")
 
     rng = np.random.default_rng(0)
-    mem = np.zeros(256, np.float32)
-    mem[0:32] = x = rng.standard_normal(32).astype(np.float32)
-    mem[64:96] = y = rng.standard_normal(32).astype(np.float32)
+    x = rng.standard_normal(N).astype(np.float32)
+    y = rng.standard_normal(N).astype(np.float32)
 
-    state = run(cfg, prog, mem)
-    out = np.asarray(shmem_f32(state))
-    z = out[128:160]
+    dcfg = DeviceConfig(n_sms=N_SMS, global_mem_depth=4 * N,
+                        sm=SMConfig(max_steps=1000))
+    res = launch(dcfg, prog, grid=(N_BLOCKS,), block=BLOCK,
+                 buffers={"x": x, "y": y,
+                          "z": np.zeros(N, np.float32),
+                          "partials": np.zeros(N_BLOCKS, np.float32)})
+
+    z = np.asarray(res.buffer("z"))
+    partials = np.asarray(res.buffer("partials"))
+    print(f"grid {res.grid} x block {res.block} on {N_SMS} SMs "
+          f"-> {res.n_waves} waves {list(res.wave_cycles)}")
     print("z == 2x+y:", np.allclose(z, 2 * x + y))
-    print("sum(z):", out[192], "expected:", z.sum())
-    p = profile(state)
-    print(f"cycles: {p['total_cycles']}  by class: "
+    print("block partials ok:",
+          np.allclose(partials, z.reshape(N_BLOCKS, BLOCK).sum(axis=1),
+                      rtol=1e-5))
+    p = res.profile()
+    print(f"aggregate cycles: {p['total_cycles']}  by class: "
           f"{ {k: v for k, v in p['by_class'].items() if v} }")
 
 

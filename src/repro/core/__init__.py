@@ -1,14 +1,32 @@
 """eGPU core: the paper's contribution as a composable JAX module.
 
 Public API:
-    SMConfig, MachineState, init_state  — machine model
+    SMConfig, MachineState, init_state   — single-SM machine model
+    DeviceConfig, launch, LaunchResult   — multi-SM device layer (grid/block
+                                           launches, global memory, waves)
     assemble, disassemble, check_hazards — assembler
-    run, run_many                        — jitted ISS
+    run, run_many                        — jitted ISS (single-wave shims)
+    execute_backends                     — pluggable ALU execute stages
     profile                              — Table III/IV-style cycle profile
     resources                            — Tables I/V + §III.E analytic model
 """
 from .assembler import AsmError, Program, assemble, check_hazards, disassemble
-from .executor import pack_imem, run, run_many
+from .device import (
+    DeviceConfig,
+    DeviceState,
+    LaunchResult,
+    buffer_layout,
+    launch,
+    pack_buffers,
+)
+from .executor import (
+    execute_backends,
+    get_execute_backend,
+    pack_imem,
+    register_execute_backend,
+    run,
+    run_many,
+)
 from .isa import CLASS_NAMES, Depth, Instr, Op, Typ, Width
 from .machine import (
     MachineState,
@@ -24,7 +42,10 @@ from . import resources
 
 __all__ = [
     "AsmError", "Program", "assemble", "check_hazards", "disassemble",
+    "DeviceConfig", "DeviceState", "LaunchResult", "buffer_layout",
+    "launch", "pack_buffers",
     "pack_imem", "run", "run_many",
+    "execute_backends", "get_execute_backend", "register_execute_backend",
     "CLASS_NAMES", "Depth", "Instr", "Op", "Typ", "Width",
     "MachineState", "SMConfig", "init_state", "profile",
     "regs_f32", "regs_i32", "shmem_f32", "shmem_i32",

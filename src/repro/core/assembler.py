@@ -8,6 +8,9 @@ Syntax (one instruction per line, ``//`` or ``;`` comments, ``label:`` lines):
     NOT       R3, R1
     LOD       R2, (R1)+5          // shared-memory indexed load
     STO       R2, (R3)+0          // shared-memory indexed store
+    GLD       R2, (R1)+5          // GLOBAL-memory load (shared across SMs)
+    GST       R2, (R3)+0          // GLOBAL-memory store
+    BID       R7                  // thread-block index -> R7 (launch grid)
     LOD       R4, #128            // immediate load
     LOD.FP32  R4, #3              // immediate load, converted to 3.0f
     TDX       R1                  // thread id x -> R1
@@ -154,15 +157,15 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
         kw.update(rd=rd, ra=ra)
         if ea is not None:
             kw.update(x=1, ext_a=ea)
-    elif op in (Op.LOD, Op.STO):
+    elif op in (Op.LOD, Op.STO, Op.GLD, Op.GST):
         if len(operands) != 2:
             raise AsmError(f"{op.name} needs 2 operands", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
         kw.update(rd=rd)
         tgt = operands[1]
         if tgt.startswith("#"):
-            if op == Op.STO:
-                raise AsmError("STO has no immediate form", lineno, line)
+            if op != Op.LOD:
+                raise AsmError(f"{op.name} has no immediate form", lineno, line)
             kw.update(op=Op.LODI, imm=int(tgt[1:], 0))
         else:
             m = _MEM.match(tgt)
@@ -174,7 +177,7 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
             raise AsmError("LODI Rd, #imm", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
         kw.update(rd=rd, imm=int(operands[1][1:], 0))
-    elif op in (Op.TDX, Op.TDY):
+    elif op in (Op.TDX, Op.TDY, Op.BID):
         if len(operands) != 1:
             raise AsmError(f"{op.name} needs 1 operand", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
@@ -251,13 +254,13 @@ def disassemble(word: int) -> str:
         return f"{op.name}{t} R{ins.rd}, {reg(ins.ra, ins.ext_a)}, {reg(ins.rb, ins.ext_b)}{m}"
     if op in _TWO_OP:
         return f"{op.name}{t} R{ins.rd}, {reg(ins.ra, ins.ext_a)}{m}"
-    if op == Op.LOD:
-        return f"LOD{t} R{ins.rd}, (R{ins.ra})+{ins.imm}{m}"
-    if op == Op.STO:
-        return f"STO R{ins.rd}, (R{ins.ra})+{ins.imm}{m}"
+    if op in (Op.LOD, Op.GLD):
+        return f"{op.name}{t} R{ins.rd}, (R{ins.ra})+{ins.imm}{m}"
+    if op in (Op.STO, Op.GST):
+        return f"{op.name} R{ins.rd}, (R{ins.ra})+{ins.imm}{m}"
     if op == Op.LODI:
         return f"LOD{t} R{ins.rd}, #{ins.imm}{m}"
-    if op in (Op.TDX, Op.TDY):
+    if op in (Op.TDX, Op.TDY, Op.BID):
         return f"{op.name} R{ins.rd}{m}"
     if op in (Op.JMP, Op.JSR, Op.LOOP):
         return f"{op.name} {ins.imm}"
@@ -285,7 +288,8 @@ def check_hazards(program: Program, n_threads: int = 512) -> list[str]:
 
     warnings: list[str] = []
     window: list[tuple[int, int, int]] = []  # (pc, rd, ready_cycle)
-    mem_ready = 0                            # store->load visibility fence
+    mem_ready = 0                            # shared-mem store->load fence
+    gmem_ready = 0                           # global-mem store->load fence
     now = 0
     for pc, ins in enumerate(program.instrs):
         if ins.op in (Op.JMP, Op.JSR, Op.RTS, Op.LOOP, Op.STOP):
@@ -295,10 +299,10 @@ def check_hazards(program: Program, n_threads: int = 512) -> list[str]:
         reads = []
         if ins.op in _THREE_OP:
             reads = [ins.ra, ins.rb]
-        elif ins.op in _TWO_OP or ins.op in (Op.LOD, Op.STO):
+        elif ins.op in _TWO_OP or ins.op in (Op.LOD, Op.STO, Op.GLD, Op.GST):
             reads = [ins.ra]
-            if ins.op == Op.STO:
-                reads.append(ins.rd)  # STO reads the stored register
+            if ins.op in (Op.STO, Op.GST):
+                reads.append(ins.rd)  # stores read the stored register
         src = program.source[pc] if pc < len(program.source) else ""
         for (wpc, wrd, ready) in window:
             if wrd in reads and now < ready:
@@ -310,10 +314,16 @@ def check_hazards(program: Program, n_threads: int = 512) -> list[str]:
             warnings.append(
                 f"pc={pc}: LOD issued at {now} before a prior STO commits at "
                 f"{mem_ready} (insert {mem_ready - now} NOP-cycles)  [{src}]")
+        if ins.op == Op.GLD and now < gmem_ready:
+            warnings.append(
+                f"pc={pc}: GLD issued at {now} before a prior GST commits at "
+                f"{gmem_ready} (insert {gmem_ready - now} NOP-cycles)  [{src}]")
         cyc = instr_cycles(ins, n_threads)
         if ins.op == Op.STO:
             mem_ready = max(mem_ready, now + RESULT_LATENCY)
-        if ins.op not in (Op.NOP, Op.STO):
+        if ins.op == Op.GST:
+            gmem_ready = max(gmem_ready, now + RESULT_LATENCY)
+        if ins.op not in (Op.NOP, Op.STO, Op.GST):
             window.append((pc, ins.rd, now + RESULT_LATENCY))
         window = [w for w in window if w[2] > now]
         now += cyc

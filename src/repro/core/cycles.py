@@ -26,6 +26,16 @@ d(block), active threads = wavefronts * w. A full 512-thread block therefore
 pays 32 cycles for an op, 128 for a load, 512 for a store — and a
 {w1,d1}-masked store pays exactly 1 (paper: "the norm writeback only
 requires a single clock cycle").
+
+Multi-SM device extension (GLD/GST): the global-memory segment lives
+outside the SMs, reached over the sector interconnect through a SINGLE
+read port and a SINGLE write port shared by every SM in the packed sector
+(the same single-port discipline as the shared-memory write path, but now
+device-wide). A global access therefore costs one cycle per active thread
+— and when ``n_sms`` SMs issue the access in lockstep, the port serializes
+them: ``n_sms * active_threads`` cycles. This is the packed-sector
+contention model used by the device-level cycle accounting in
+``device.py``.
 """
 from __future__ import annotations
 
@@ -42,7 +52,18 @@ def active_shape(width: Width, depth: Depth, n_threads: int) -> tuple[int, int]:
     return waves, WIDTH_THREADS[width]
 
 
-def instr_cycles(ins: Instr, n_threads: int) -> int:
+def instr_cycles(ins: Instr, n_threads: int, n_sms: int = 1) -> int:
+    """Sequencer occupancy of one instruction.
+
+    ``n_sms`` models packed-sector contention: SMs executing in lockstep
+    share the single global-memory port, so GLD/GST serialize across SMs.
+    All other instruction classes use per-SM resources and are unaffected.
+
+    This is the host-side statement of the cost model; the traced
+    equivalent lives in ``device._device_step`` (it cannot call back into
+    Python on decoded fields). ``tests/test_device.py`` pins the two
+    together per instruction class.
+    """
     waves, wthreads = active_shape(ins.width, ins.depth, n_threads)
     threads = waves * wthreads
     op = ins.op
@@ -53,5 +74,7 @@ def instr_cycles(ins: Instr, n_threads: int) -> int:
         return max(1, (threads + 3) // 4)   # 4 read ports
     if op == Op.STO:
         return threads                       # 1 write port
-    # everything else is wavefront-paced: ALU, LODI, TDx/TDy, DOT, SUM
+    if op in (Op.GLD, Op.GST):
+        return threads * max(1, n_sms)       # 1 global port, device-wide
+    # everything else is wavefront-paced: ALU, LODI, TDx/TDy/BID, DOT, SUM
     return waves

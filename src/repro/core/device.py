@@ -1,0 +1,607 @@
+"""Multi-SM eGPU device layer: grid/block launches over a packed sector.
+
+The paper closes with "multiple eGPUs can also be tightly packed together
+into a single Agilex FPGA logic region" (§III.E quad-packs four SMs per
+sector); the scalable follow-up (arXiv 2401.04261) makes the SM count the
+headline parameter. This module is that device abstraction:
+
+  * ``DeviceConfig(n_sms, global_mem_depth, ...)`` wraps the single-SM
+    ``SMConfig`` with the sector-level parameters;
+  * ``launch(dcfg, program, grid=(n_blocks,), block=n_threads, ...)`` is a
+    CUDA-style launch: thread blocks are scheduled onto the ``n_sms`` SMs
+    in *waves* — blocks beyond ``n_sms`` queue and run in subsequent
+    rounds, with aggregate cycle accounting over the rounds;
+  * every SM keeps its private shared memory, and all SMs reach one
+    **global-memory segment** (GLD/GST/BID in ``isa.py``) through a single
+    device-wide port — the serialization shows up in the cycle model
+    (``cycles.instr_cycles(..., n_sms=...)``).
+
+Lockstep execution
+------------------
+The eGPU ISA has *no data-dependent control flow*: JMP/JSR/LOOP/INIT/RTS
+targets and trip counts are immediates, and STOP is unconditional. Blocks
+running the same program therefore execute the identical PC trace, so one
+wave is simulated as a single batched machine: ONE shared sequencer state
+(pc, loop/return stacks, halt flag, cycle counters) plus per-SM data state
+(registers, shared memory) and the one shared global memory. This is exact
+— not an approximation — and it is what lets the per-step ALU execute
+stage run as one ``(n_sms, 512)`` batch through a pluggable backend
+(``executor.get_execute_backend``): the inline jnp path or the Pallas
+``simt_alu`` kernel as a single grid over the SM batch.
+
+Global-memory semantics (the packed-sector memory model):
+
+  * reads (GLD) see the segment as of the start of the cycle;
+  * writes (GST) drain through the single port sequentially in
+    (sm, thread) order, so on address collisions the LAST writer — highest
+    thread of the highest SM — wins, mirroring the shared-memory
+    single-write-port determinism;
+  * waves run back to back: a later wave sees every earlier wave's global
+    writes (this is how grid-wide reductions hand partials forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .isa import NUM_CLASSES, Op
+from .machine import (
+    LOOP_STACK_DEPTH,
+    MAX_THREADS,
+    MAX_WAVES,
+    N_REGS,
+    N_SP,
+    RET_STACK_DEPTH,
+    MachineState,
+    SMConfig,
+    as_u32_image,
+)
+from .executor import (
+    _CLASS_OF,
+    _G_CTL,
+    _G_GLD,
+    _G_GST,
+    _G_LOD,
+    _G_NOP,
+    _G_SFU,
+    _G_STO,
+    _GROUP_OF_OP,
+    _decode,
+    get_execute_backend,
+    pack_imem,
+)
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def _bitcast_f32(x):
+    return jax.lax.bitcast_convert_type(x, _F32)
+
+
+def _bitcast_u32(x):
+    return jax.lax.bitcast_convert_type(x, _U32)
+
+
+# ---------------------------------------------------------------------------
+# configuration + state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Sector-level machine parameters wrapping the per-SM ``SMConfig``."""
+
+    n_sms: int = 4                    # SMs packed in the sector (§III.E: 4)
+    global_mem_depth: int = 4096      # words of the shared global segment
+    sm: SMConfig = SMConfig()         # per-SM template (block size is set
+                                      # per launch; the rest is inherited)
+    backend: str = "inline"           # default execute backend
+
+    def __post_init__(self):
+        if self.n_sms < 1:
+            raise ValueError(f"n_sms={self.n_sms} must be >= 1")
+        if self.global_mem_depth < 1:
+            raise ValueError("global_mem_depth must be >= 1")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeviceState:
+    """One wave's batched machine state (a JAX pytree).
+
+    Data state is per-SM (leading ``n_sms`` axis); sequencer state is
+    shared across the lockstep batch; global memory is one segment.
+    """
+
+    regs: jax.Array        # (n_sms, MAX_THREADS, N_REGS) uint32
+    shmem: jax.Array       # (n_sms, shmem_depth) uint32
+    gmem: jax.Array        # (global_mem_depth,) uint32 — SHARED
+    pc: jax.Array          # () int32
+    ret_stack: jax.Array   # (RET_STACK_DEPTH,) int32
+    ret_sp: jax.Array      # () int32
+    loop_ctr: jax.Array    # (LOOP_STACK_DEPTH,) int32
+    loop_sp: jax.Array     # () int32
+    halted: jax.Array      # () bool
+    oob: jax.Array         # (n_sms,) bool — per-SM out-of-range access
+    steps: jax.Array       # () int32
+    cycles: jax.Array      # () int32 — wave cycles incl. gmem contention
+    cycles_by_class: jax.Array  # (NUM_CLASSES,) int32
+
+    def replace(self, **kw) -> "DeviceState":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def n_sms(self) -> int:
+        return self.regs.shape[0]
+
+
+def init_device_state(cfg: SMConfig, n_sms: int, gmem_depth: int = 64,
+                      shmem: Any = None, gmem: Any = None) -> DeviceState:
+    """Fresh wave state. ``shmem`` may be None, one image (broadcast to all
+    SMs), or an (n_sms, ...) batch of per-SM images."""
+    if shmem is None:
+        sh = jnp.zeros((n_sms, cfg.shmem_depth), _U32)
+    else:
+        sh = as_u32_image(shmem, cfg.shmem_depth, "shared-memory")
+        if sh.ndim == 1:
+            sh = jnp.broadcast_to(sh, (n_sms, cfg.shmem_depth))
+        elif sh.shape[0] != n_sms:
+            raise ValueError(f"shared-memory batch of {sh.shape[0]} images "
+                             f"!= n_sms={n_sms}")
+    if gmem is None:
+        gm = jnp.zeros((gmem_depth,), _U32)
+    else:
+        gm = as_u32_image(gmem, gmem_depth, "global-memory")
+    return DeviceState(
+        regs=jnp.zeros((n_sms, MAX_THREADS, N_REGS), _U32),
+        shmem=sh,
+        gmem=gm,
+        pc=jnp.zeros((), _I32),
+        ret_stack=jnp.zeros((RET_STACK_DEPTH,), _I32),
+        ret_sp=jnp.zeros((), _I32),
+        loop_ctr=jnp.zeros((LOOP_STACK_DEPTH,), _I32),
+        loop_sp=jnp.zeros((), _I32),
+        halted=jnp.zeros((), jnp.bool_),
+        oob=jnp.zeros((n_sms,), jnp.bool_),
+        steps=jnp.zeros((), _I32),
+        cycles=jnp.zeros((), _I32),
+        cycles_by_class=jnp.zeros((NUM_CLASSES,), _I32),
+    )
+
+
+def lift_machine_state(state: MachineState, gmem_depth: int = 64) -> DeviceState:
+    """Wrap a legacy single-SM ``MachineState`` as a 1-SM wave."""
+    return DeviceState(
+        regs=state.regs[None], shmem=state.shmem[None],
+        gmem=jnp.zeros((gmem_depth,), _U32),
+        pc=state.pc, ret_stack=state.ret_stack, ret_sp=state.ret_sp,
+        loop_ctr=state.loop_ctr, loop_sp=state.loop_sp,
+        halted=state.halted, oob=jnp.reshape(state.oob, (1,)),
+        steps=state.steps, cycles=state.cycles,
+        cycles_by_class=state.cycles_by_class,
+    )
+
+
+def squeeze_device_state(s: DeviceState) -> MachineState:
+    """Project a 1-SM wave back to the legacy ``MachineState`` view."""
+    return MachineState(
+        regs=s.regs[0], shmem=s.shmem[0], pc=s.pc,
+        ret_stack=s.ret_stack, ret_sp=s.ret_sp,
+        loop_ctr=s.loop_ctr, loop_sp=s.loop_sp,
+        halted=s.halted, oob=s.oob[0], steps=s.steps, cycles=s.cycles,
+        cycles_by_class=s.cycles_by_class,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the batched device step
+# ---------------------------------------------------------------------------
+
+def _last_writer_write(mem, addr, vals, do, order):
+    """Serialized single-port store: among enabled writers to the same
+    address, the one latest in ``order`` wins (thread order within an SM;
+    (sm, thread)-major order device-wide for global memory). Implemented
+    with a commutative scatter-max so it is deterministic under jit."""
+    depth = mem.shape[0]
+    slot = jnp.where(do, addr, depth)                    # park masked writes
+    winner = jnp.full((depth + 1,), -1, _I32).at[slot].max(order)
+    write = do & (winner[slot] == order)
+    return mem.at[jnp.where(write, addr, depth)].set(vals, mode="drop")
+
+
+def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
+                 s: DeviceState) -> DeviceState:
+    n_sms = s.regs.shape[0]
+    d = _decode(imem_lo[s.pc], imem_hi[s.pc])
+    tid = jnp.arange(MAX_THREADS, dtype=_I32)
+    lane = tid % N_SP
+    wave = tid // N_SP
+
+    # ---- flexible-ISA active mask (identical across the lockstep batch) ----
+    n_waves = cfg.n_waves
+    depth_table = jnp.array(
+        [n_waves, max(1, n_waves // 2), max(1, n_waves // 4), 1], _I32)
+    width_table = jnp.array([16, 8, 4, 1], _I32)
+    act_waves = depth_table[d["depth"]]
+    act_wthreads = width_table[d["width"]]
+    active = (lane < act_wthreads) & (wave < act_waves) & (tid < cfg.n_threads)
+
+    # ---- operand reads (with thread snooping), batched over SMs ------------
+    snoop = d["x"] == 1
+    ra_tid = jnp.where(snoop, d["ext_a"] * N_SP + lane, tid)
+    rb_tid = jnp.where(snoop, d["ext_b"] * N_SP + lane, tid)
+    a_u = s.regs[:, ra_tid, d["ra"]]          # (n_sms, 512)
+    b_u = s.regs[:, rb_tid, d["rb"]]
+    a_i = jax.lax.bitcast_convert_type(a_u, _I32)
+
+    op, typ = d["opcode"], d["typ"]
+    is_fp = typ == int(isa.Typ.FP32)
+
+    def col(regs, rd):
+        return jnp.take(regs, rd, axis=2)     # (n_sms, 512)
+
+    def set_col(regs, rd, vals):
+        return regs.at[:, :, rd].set(vals)
+
+    def write_active(regs, rd, vals, mask):
+        return set_col(regs, rd, jnp.where(mask, vals, col(regs, rd)))
+
+    # ---- group handlers -----------------------------------------------------
+
+    def h_nop(s):
+        return s
+
+    def h_alu(s):
+        old = col(s.regs, d["rd"])
+        mask = jnp.broadcast_to(active, old.shape)
+        res = execute(op, typ, a_u, b_u, mask, old)
+        return s.replace(regs=set_col(s.regs, d["rd"], res))
+
+    def h_lod(s):
+        addr = a_i + d["imm"]
+        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
+        safe = jnp.clip(addr, 0, cfg.shmem_depth - 1)
+        vals = jnp.take_along_axis(s.shmem, safe, axis=1)
+        regs = write_active(s.regs, d["rd"], vals, active & ~bad)
+        return s.replace(regs=regs, oob=s.oob | bad.any(axis=1))
+
+    def h_sto(s):
+        addr = a_i + d["imm"]
+        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
+        vals = col(s.regs, d["rd"])
+        do = active & ~bad
+        shmem = jax.vmap(_last_writer_write, in_axes=(0, 0, 0, 0, None))(
+            s.shmem, addr, vals, do, tid)
+        return s.replace(shmem=shmem, oob=s.oob | bad.any(axis=1))
+
+    def h_gld(s):
+        gdepth = s.gmem.shape[0]
+        addr = a_i + d["imm"]
+        bad = active & ((addr < 0) | (addr >= gdepth))
+        safe = jnp.clip(addr, 0, gdepth - 1)
+        vals = s.gmem[safe]                   # (n_sms, 512) gather
+        regs = write_active(s.regs, d["rd"], vals, active & ~bad)
+        return s.replace(regs=regs, oob=s.oob | bad.any(axis=1))
+
+    def h_gst(s):
+        gdepth = s.gmem.shape[0]
+        addr = a_i + d["imm"]
+        bad = active & ((addr < 0) | (addr >= gdepth))
+        vals = col(s.regs, d["rd"])
+        do = active & ~bad
+        # the single device-wide port drains in (sm, thread) order
+        order = jnp.arange(n_sms * MAX_THREADS, dtype=_I32)
+        gmem = _last_writer_write(s.gmem, addr.reshape(-1), vals.reshape(-1),
+                                  do.reshape(-1), order)
+        return s.replace(gmem=gmem, oob=s.oob | bad.any(axis=1))
+
+    def h_lodi(s):
+        as_f = _bitcast_u32(d["imm"].astype(_F32))
+        val = jnp.where(is_fp, as_f, d["imm"].astype(_U32))
+        vals = jnp.broadcast_to(val, (n_sms, MAX_THREADS))
+        return s.replace(regs=write_active(s.regs, d["rd"], vals, active))
+
+    def h_td(s):
+        x = (tid % cfg.dim_x).astype(_U32)[None]            # (1, 512)
+        y = (tid // cfg.dim_x).astype(_U32)[None]
+        bid = jnp.broadcast_to(block_idx.astype(_U32)[:, None],
+                               (n_sms, MAX_THREADS))
+        vals = jnp.where(op == int(Op.TDX), x,
+                         jnp.where(op == int(Op.TDY), y, bid))
+        return s.replace(regs=write_active(s.regs, d["rd"], vals, active))
+
+    def h_red(s):
+        # DOT/SUM: reduce each active wavefront across its active lanes,
+        # write the result to lane 0 of that wavefront (the first SP).
+        lane_active = active.reshape(MAX_WAVES, N_SP)
+        a2 = _bitcast_f32(a_u).reshape(n_sms, MAX_WAVES, N_SP)
+        b2 = _bitcast_f32(b_u).reshape(n_sms, MAX_WAVES, N_SP)
+        prod = jnp.where(op == int(Op.DOT), a2 * b2, a2 + b2)
+        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
+        wave_active = lane_active.any(axis=1)               # (waves,)
+        dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP     # lane 0 per wave
+        cur = s.regs[:, dest, d["rd"]]                      # (n_sms, waves)
+        new = jnp.where(wave_active[None], _bitcast_u32(red), cur)
+        return s.replace(regs=s.regs.at[:, dest, d["rd"]].set(new))
+
+    def h_sfu(s):
+        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source)
+        src_tid = jnp.where(snoop, d["ext_a"] * N_SP, 0)
+        val = _bitcast_f32(s.regs[:, src_tid, d["ra"]])     # (n_sms,)
+        r = jax.lax.rsqrt(val)
+        return s.replace(regs=s.regs.at[:, 0, d["rd"]].set(_bitcast_u32(r)))
+
+    def h_ctl(s):
+        imm = d["imm_raw"]
+        pc1 = s.pc + 1
+        # LOOP: decrement top counter; jump while > 1, pop at 1
+        lsp = jnp.clip(s.loop_sp - 1, 0, LOOP_STACK_DEPTH - 1)
+        top = s.loop_ctr[lsp]
+        loop_taken = top > 1
+        new_pc = jnp.select(
+            [op == int(Op.JMP), op == int(Op.JSR), op == int(Op.RTS),
+             op == int(Op.LOOP)],
+            [imm, imm,
+             s.ret_stack[jnp.clip(s.ret_sp - 1, 0, RET_STACK_DEPTH - 1)],
+             jnp.where(loop_taken, imm, pc1)],
+            pc1)
+        ret_stack = jnp.where(
+            op == int(Op.JSR),
+            s.ret_stack.at[jnp.clip(s.ret_sp, 0, RET_STACK_DEPTH - 1)].set(pc1),
+            s.ret_stack)
+        ret_sp = s.ret_sp + jnp.where(op == int(Op.JSR), 1, 0) \
+            - jnp.where(op == int(Op.RTS), 1, 0)
+        loop_ctr = jnp.where(
+            op == int(Op.INIT),
+            s.loop_ctr.at[jnp.clip(s.loop_sp, 0, LOOP_STACK_DEPTH - 1)].set(imm),
+            jnp.where(op == int(Op.LOOP),
+                      s.loop_ctr.at[lsp].set(top - 1), s.loop_ctr))
+        loop_sp = s.loop_sp \
+            + jnp.where(op == int(Op.INIT), 1, 0) \
+            - jnp.where((op == int(Op.LOOP)) & ~loop_taken, 1, 0)
+        halted = s.halted | (op == int(Op.STOP))
+        return s.replace(pc=new_pc, ret_stack=ret_stack, ret_sp=ret_sp,
+                         loop_ctr=loop_ctr, loop_sp=loop_sp, halted=halted)
+
+    handlers = [h_nop, h_alu, h_lod, h_sto, h_lodi, h_td, h_red, h_sfu,
+                h_ctl, h_gld, h_gst]
+    group = jnp.asarray(_GROUP_OF_OP)[op]
+    s2 = jax.lax.switch(group, handlers, s)
+
+    # ---- pc advance (control group already set it) --------------------------
+    is_ctl = group == _G_CTL
+    pc = jnp.where(is_ctl, s2.pc, s.pc + 1)
+
+    # ---- cycle accounting ----------------------------------------------------
+    # Per-SM resources (ALU, shared memory, extension units) run concurrently
+    # across the lockstep batch; the single global-memory port serializes the
+    # batch, so GLD/GST pay n_sms * active_threads (cycles.py).
+    act_threads = act_waves * act_wthreads
+    one = jnp.int32(1)
+    is_gmem = (group == _G_GLD) | (group == _G_GST)
+    cyc = jnp.select(
+        [group == _G_LOD, group == _G_STO, is_gmem,
+         (group == _G_NOP) | (group == _G_CTL) | (group == _G_SFU)],
+        [jnp.maximum(one, (act_threads + 3) // 4), act_threads,
+         act_threads * n_sms, one],
+        act_waves)
+    klass = jnp.asarray(_CLASS_OF)[op, typ]
+    return DeviceState(
+        regs=s2.regs, shmem=s2.shmem, gmem=s2.gmem, pc=pc,
+        ret_stack=s2.ret_stack, ret_sp=s2.ret_sp,
+        loop_ctr=s2.loop_ctr, loop_sp=s2.loop_sp,
+        halted=s2.halted, oob=s2.oob,
+        steps=s.steps + 1,
+        cycles=s.cycles + cyc,
+        cycles_by_class=s.cycles_by_class.at[klass].add(cyc),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def run_wave(cfg: SMConfig, backend: str, imem_lo, imem_hi, block_idx,
+             state: DeviceState) -> DeviceState:
+    """Run one wave of blocks to completion (jitted ``lax.while_loop``)."""
+    execute = get_execute_backend(backend)
+
+    def cond(s):
+        return (~s.halted) & (s.steps < cfg.max_steps) \
+            & (s.pc >= 0) & (s.pc < cfg.imem_depth)
+
+    def body(s):
+        return _device_step(cfg, execute, imem_lo, imem_hi, block_idx, s)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# buffers: named global-memory segments
+# ---------------------------------------------------------------------------
+
+def buffer_layout(buffers: Mapping[str, Any]) -> dict[str, tuple[int, int]]:
+    """Deterministic gmem layout: name -> (offset, length) in 32-bit words,
+    packed in insertion order from offset 0. Program builders call this to
+    derive addresses; ``launch`` uses the same layout to fill gmem."""
+    layout: dict[str, tuple[int, int]] = {}
+    off = 0
+    for name, arr in buffers.items():
+        n = int(np.asarray(arr).reshape(-1).shape[0])
+        layout[name] = (off, n)
+        off += n
+    return layout
+
+
+def pack_buffers(buffers: Mapping[str, Any], depth: int
+                 ) -> tuple[jax.Array, dict[str, tuple[int, int]]]:
+    """Pack named host arrays into one global-memory image of ``depth``."""
+    layout = buffer_layout(buffers)
+    used = sum(n for _, n in layout.values())
+    if used > depth:
+        raise ValueError(f"buffers need {used} words but global_mem_depth "
+                         f"is {depth}")
+    img = jnp.zeros((depth,), _U32)
+    for name, arr in buffers.items():
+        off, n = layout[name]
+        img = img.at[off:off + n].set(
+            as_u32_image(np.asarray(arr).reshape(-1), n, name))
+    return img, layout
+
+
+# ---------------------------------------------------------------------------
+# the launch API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LaunchResult:
+    """Per-block results + aggregate device profile of one launch."""
+
+    grid: tuple[int, ...]
+    block: int
+    n_waves: int
+    regs: jax.Array             # (n_blocks, MAX_THREADS, N_REGS) uint32
+    shmem: jax.Array            # (n_blocks, shmem_depth) uint32
+    gmem: jax.Array             # (global_mem_depth,) uint32 — final
+    oob: jax.Array              # (n_blocks,) bool
+    halted: bool                # every wave ran to STOP
+    steps: int                  # instructions issued, summed over waves
+    cycles: int                 # aggregate device cycles (waves run back
+                                # to back on the one sector)
+    wave_cycles: np.ndarray     # (n_waves,) per-round cycle counts
+    cycles_by_class: np.ndarray  # (NUM_CLASSES,) summed over waves
+    buffer_offsets: dict[str, tuple[int, int]] | None = None
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.grid[0])
+
+    def shmem_f32(self) -> jax.Array:
+        return _bitcast_f32(self.shmem)
+
+    def gmem_f32(self) -> jax.Array:
+        return _bitcast_f32(self.gmem)
+
+    def buffer(self, name: str, dtype=jnp.float32) -> jax.Array:
+        """Final contents of a named gmem buffer (bitcast to ``dtype``)."""
+        if not self.buffer_offsets or name not in self.buffer_offsets:
+            raise KeyError(f"no buffer {name!r} in this launch")
+        off, n = self.buffer_offsets[name]
+        seg = self.gmem[off:off + n]
+        if dtype in (jnp.uint32, np.uint32):
+            return seg
+        return jax.lax.bitcast_convert_type(seg, dtype)
+
+    def profile(self) -> dict[str, Any]:
+        """Aggregate cycle profile by instruction class (Tables III/IV view,
+        extended with the GMEM row)."""
+        by = np.asarray(self.cycles_by_class)
+        total = int(by.sum())
+        return {
+            "total_cycles": total,
+            "instructions": int(self.steps),
+            "n_waves": self.n_waves,
+            "wave_cycles": [int(c) for c in self.wave_cycles],
+            "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
+            "pct_by_class": {n: (100.0 * int(c) / total if total else 0.0)
+                             for n, c in zip(isa.CLASS_NAMES, by)},
+        }
+
+
+def launch(dcfg: DeviceConfig, program, grid, block: int | None = None, *,
+           buffers: Mapping[str, Any] | None = None,
+           shmem: Any = None, gmem: Any = None,
+           backend: str | None = None, dim_x: int | None = None
+           ) -> LaunchResult:
+    """CUDA-style kernel launch on the multi-SM device.
+
+    Args:
+      dcfg: the device (sector) configuration.
+      program: an assembled ``Program`` or encoded 40-bit word array.
+      grid: number of thread blocks, as ``(n_blocks,)`` or an int.
+      block: threads per block (<= 512); defaults to ``dcfg.sm.n_threads``.
+      buffers: named host arrays packed into global memory from offset 0 in
+        insertion order (layout via ``buffer_layout``); mutually exclusive
+        with ``gmem``, a raw initial global-memory image.
+      shmem: per-SM shared-memory initializer — one image broadcast to all
+        blocks, or an ``(n_blocks, ...)`` batch of per-block images.
+      backend: execute backend ("inline" | "pallas"); default from dcfg.
+      dim_x: the 2-D thread-space x extent (TDX/TDY); defaults to ``block``
+        (flat 1-D indexing, the CUDA idiom).
+
+    Blocks are scheduled in waves of ``dcfg.n_sms``: wave ``w`` runs blocks
+    ``[w*n_sms, (w+1)*n_sms)`` concurrently; the global-memory image carries
+    from wave to wave, and cycle counts aggregate across waves.
+    """
+    grid = (int(grid),) if isinstance(grid, int) else tuple(map(int, grid))
+    if len(grid) != 1 or grid[0] < 1:
+        raise ValueError(f"grid={grid} must be a positive (n_blocks,)")
+    n_blocks = grid[0]
+    block = int(block) if block is not None else dcfg.sm.n_threads
+    cfg = dataclasses.replace(dcfg.sm, n_threads=block,
+                              dim_x=dim_x if dim_x is not None else block)
+    backend = backend or dcfg.backend
+
+    words = program.words if hasattr(program, "words") else np.asarray(program)
+    lo, hi = pack_imem(words, cfg.imem_depth)
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+
+    # global-memory image
+    offsets = None
+    if buffers is not None:
+        if gmem is not None:
+            raise ValueError("pass either buffers= or gmem=, not both")
+        gm, offsets = pack_buffers(buffers, dcfg.global_mem_depth)
+    elif gmem is not None:
+        gm = as_u32_image(gmem, dcfg.global_mem_depth, "global-memory")
+    else:
+        gm = jnp.zeros((dcfg.global_mem_depth,), _U32)
+
+    # per-block shared-memory images
+    sh_batch = None
+    if shmem is not None:
+        sh_batch = as_u32_image(shmem, cfg.shmem_depth, "shared-memory")
+        if sh_batch.ndim == 1:
+            sh_batch = jnp.broadcast_to(sh_batch, (n_blocks, cfg.shmem_depth))
+        elif sh_batch.shape[0] != n_blocks:
+            raise ValueError(f"shared-memory batch of {sh_batch.shape[0]} "
+                             f"images != n_blocks={n_blocks}")
+
+    regs_parts, shmem_parts, oob_parts = [], [], []
+    wave_cycles, wave_steps = [], []
+    by_class = np.zeros((NUM_CLASSES,), np.int64)
+    halted = True
+    for w0 in range(0, n_blocks, dcfg.n_sms):
+        w1 = min(w0 + dcfg.n_sms, n_blocks)
+        n = w1 - w0
+        st = init_device_state(
+            cfg, n, gmem_depth=dcfg.global_mem_depth,
+            shmem=None if sh_batch is None else sh_batch[w0:w1], gmem=gm)
+        bidx = jnp.arange(w0, w1, dtype=_I32)
+        fin = run_wave(cfg, backend, lo, hi, bidx, st)
+        gm = fin.gmem                       # waves run back to back
+        regs_parts.append(fin.regs)
+        shmem_parts.append(fin.shmem)
+        oob_parts.append(fin.oob)
+        wave_cycles.append(int(fin.cycles))
+        wave_steps.append(int(fin.steps))
+        by_class += np.asarray(fin.cycles_by_class, np.int64)
+        halted = halted and bool(fin.halted)
+
+    return LaunchResult(
+        grid=grid, block=block, n_waves=len(wave_cycles),
+        regs=jnp.concatenate(regs_parts, axis=0),
+        shmem=jnp.concatenate(shmem_parts, axis=0),
+        gmem=gm,
+        oob=jnp.concatenate(oob_parts, axis=0),
+        halted=halted,
+        steps=int(sum(wave_steps)),
+        cycles=int(sum(wave_cycles)),
+        wave_cycles=np.asarray(wave_cycles, np.int64),
+        cycles_by_class=by_class.astype(np.int64),
+        buffer_offsets=offsets,
+    )

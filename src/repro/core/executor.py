@@ -1,4 +1,4 @@
-"""eGPU instruction-set simulator: a jitted ``lax.while_loop`` over I-MEM.
+"""eGPU instruction-set simulator: decode machinery + execute backends.
 
 Faithful to the paper's SM microarchitecture:
 
@@ -21,12 +21,30 @@ Faithful to the paper's SM microarchitecture:
     property checked by ``assembler.check_hazards``; the paper's NOP
     mitigation is reproduced in the benchmark programs.
 
-The cycle counters implement ``cycles.py`` and produce the Table III/IV
-profiles directly.
+Since the multi-SM refactor the stepping loop itself lives in
+``device.py`` and operates on a whole SM *batch* in lockstep; this module
+owns the pieces every step needs:
+
+  * ``pack_imem`` / ``_decode`` — the 40-bit I-word field extraction;
+  * the opcode -> handler-group and opcode -> profile-class tables;
+  * the **pluggable execute backends** for the ALU stage. The execute
+    stage consumes pre-gathered ``(n_sms, 512)`` uint32 operand tiles and
+    produces the masked destination column. Two implementations ship:
+
+      - ``"inline"``  — straight jnp (the ``kernels.ref`` oracle);
+      - ``"pallas"``  — the ``kernels.simt_alu`` Pallas TPU kernel, so a
+        multi-SM step executes as ONE Pallas grid over the SM batch
+        (interpreted on CPU, compiled on TPU).
+
+    Both are bit-exact by construction and selected per run via
+    ``run(..., backend=...)`` / ``DeviceConfig.backend``.
+
+``run`` and ``run_many`` are preserved as single-wave shims over the
+device layer; new code should use ``device.launch``.
 """
 from __future__ import annotations
 
-import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -34,35 +52,11 @@ import numpy as np
 
 from . import isa
 from .isa import Op
-from .machine import (
-    LOOP_STACK_DEPTH,
-    MAX_THREADS,
-    MAX_WAVES,
-    N_SP,
-    RET_STACK_DEPTH,
-    MachineState,
-    SMConfig,
-    init_state,
-)
+from .machine import MachineState, SMConfig
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
 _F32 = jnp.float32
-
-
-def _bitcast_f32(x):
-    return jax.lax.bitcast_convert_type(x, _F32)
-
-
-def _bitcast_u32(x):
-    return jax.lax.bitcast_convert_type(x, _U32)
-
-
-def _sext16(x_u32):
-    """Sign-extend the low 16 bits (the INT ALU multiplier is 16x16->32)."""
-    low = x_u32 & 0xFFFF
-    sign = (low >> 15) & 1
-    return low | (sign * jnp.uint32(0xFFFF0000))
 
 
 def pack_imem(words: np.ndarray, depth: int) -> tuple[np.ndarray, np.ndarray]:
@@ -81,7 +75,7 @@ def pack_imem(words: np.ndarray, depth: int) -> tuple[np.ndarray, np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# one sequencer step
+# decode
 # ---------------------------------------------------------------------------
 
 def _decode(lo: jax.Array, hi: jax.Array) -> dict[str, jax.Array]:
@@ -104,7 +98,8 @@ def _decode(lo: jax.Array, hi: jax.Array) -> dict[str, jax.Array]:
 
 
 # opcode -> handler group
-_G_NOP, _G_ALU, _G_LOD, _G_STO, _G_LODI, _G_TD, _G_RED, _G_SFU, _G_CTL = range(9)
+(_G_NOP, _G_ALU, _G_LOD, _G_STO, _G_LODI, _G_TD, _G_RED, _G_SFU, _G_CTL,
+ _G_GLD, _G_GST) = range(11)
 _GROUP_OF_OP = np.zeros((64,), np.int32)
 for _op, _g in {
     Op.NOP: _G_NOP,
@@ -112,248 +107,132 @@ for _op, _g in {
     Op.OR: _G_ALU, Op.XOR: _G_ALU, Op.NOT: _G_ALU, Op.LSL: _G_ALU,
     Op.LSR: _G_ALU,
     Op.LOD: _G_LOD, Op.STO: _G_STO, Op.LODI: _G_LODI,
-    Op.TDX: _G_TD, Op.TDY: _G_TD,
+    Op.TDX: _G_TD, Op.TDY: _G_TD, Op.BID: _G_TD,
     Op.DOT: _G_RED, Op.SUM: _G_RED, Op.INVSQR: _G_SFU,
     Op.JMP: _G_CTL, Op.JSR: _G_CTL, Op.RTS: _G_CTL, Op.LOOP: _G_CTL,
     Op.INIT: _G_CTL, Op.STOP: _G_CTL,
+    Op.GLD: _G_GLD, Op.GST: _G_GST,
 }.items():
     _GROUP_OF_OP[int(_op)] = _g
 
-# opcode -> profile class, per operand type (NUM_CLASSES rows of Table III/IV)
+# opcode -> profile class, per operand type (rows of Tables III/IV + GMEM)
 _CLASS_OF = np.zeros((64, 3), np.int32)
 for _op in Op:
     for _t in isa.Typ:
         _CLASS_OF[int(_op), int(_t)] = isa.instr_class(_op, _t)
 
 
-def _step(cfg: SMConfig, imem_lo, imem_hi, s: MachineState,
-          alu_fn=None) -> MachineState:
-    d = _decode(imem_lo[s.pc], imem_hi[s.pc])
-    tid = jnp.arange(MAX_THREADS, dtype=_I32)
-    lane = tid % N_SP
-    wave = tid // N_SP
+# ---------------------------------------------------------------------------
+# pluggable execute backends (the per-step ALU execute stage)
+# ---------------------------------------------------------------------------
+#
+# An execute backend implements one SIMT ALU instruction over an SM batch:
+#
+#     fn(op, typ, a, b, mask, old) -> (n_sms, 512) uint32
+#
+# ``op``/``typ`` are traced i32 scalars (the decoded fields), ``a``/``b``
+# pre-gathered source-operand tiles, ``mask`` the flexible-ISA active-thread
+# mask, ``old`` the current destination column (inactive threads keep it).
 
-    # ---- flexible-ISA active mask -----------------------------------------
-    n_waves = cfg.n_waves
-    depth_table = jnp.array(
-        [n_waves, max(1, n_waves // 2), max(1, n_waves // 4), 1], _I32)
-    width_table = jnp.array([16, 8, 4, 1], _I32)
-    act_waves = depth_table[d["depth"]]
-    act_wthreads = width_table[d["width"]]
-    active = (lane < act_wthreads) & (wave < act_waves) & (tid < cfg.n_threads)
+ExecuteBackend = Callable[..., jax.Array]
 
-    # ---- operand reads (with thread snooping) ------------------------------
-    snoop = d["x"] == 1
-    ra_tid = jnp.where(snoop, d["ext_a"] * N_SP + lane, tid)
-    rb_tid = jnp.where(snoop, d["ext_b"] * N_SP + lane, tid)
-    a_u = s.regs[ra_tid, d["ra"]]
-    b_u = s.regs[rb_tid, d["rb"]]
-    a_f, b_f = _bitcast_f32(a_u), _bitcast_f32(b_u)
-
-    op, typ = d["opcode"], d["typ"]
-    is_fp = typ == int(isa.Typ.FP32)
-
-    # ---- group handlers -----------------------------------------------------
-    def write_active(regs, rd, vals_u32, mask):
-        cur = regs[tid, rd]
-        return regs.at[tid, rd].set(jnp.where(mask, vals_u32, cur))
-
-    def h_nop(s):
-        return s
-
-    def h_alu(s):
-        if alu_fn is not None:
-            res = alu_fn(op, typ, a_u, b_u)
-        else:
-            # integer lane computed in uint32 (wrapping semantics)
-            add_u = a_u + b_u
-            sub_u = a_u - b_u
-            mul_int = _sext16(a_u) * _sext16(b_u)     # 16x16 signed
-            mul_uint = (a_u & 0xFFFF) * (b_u & 0xFFFF)  # 16x16 unsigned
-            mul_u = jnp.where(typ == int(isa.Typ.UINT32), mul_uint, mul_int)
-            sh = b_u & 31
-            res_int = jnp.select(
-                [op == int(Op.ADD), op == int(Op.SUB), op == int(Op.MUL),
-                 op == int(Op.AND), op == int(Op.OR), op == int(Op.XOR),
-                 op == int(Op.NOT), op == int(Op.LSL)],
-                [add_u, sub_u, mul_u, a_u & b_u, a_u | b_u, a_u ^ b_u,
-                 ~a_u, a_u << sh],
-                a_u >> sh)  # LSR
-            # FP32 lane (IEEE 754 single via the DSP-block FP ALU)
-            res_fp = _bitcast_u32(jnp.select(
-                [op == int(Op.ADD), op == int(Op.SUB)],
-                [a_f + b_f, a_f - b_f], a_f * b_f))
-            fp_op = is_fp & ((op == int(Op.ADD)) | (op == int(Op.SUB))
-                             | (op == int(Op.MUL)))
-            res = jnp.where(fp_op, res_fp, res_int)
-        return s.replace_regs(write_active(s.regs, d["rd"], res, active))
-
-    def h_lod(s):
-        addr = jax.lax.bitcast_convert_type(a_u, _I32) + d["imm"]
-        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
-        safe = jnp.clip(addr, 0, cfg.shmem_depth - 1)
-        vals = s.shmem[safe]
-        regs = write_active(s.regs, d["rd"], vals, active)
-        return s.replace(regs=regs, oob=s.oob | bad.any())
-
-    def h_sto(s):
-        addr = jax.lax.bitcast_convert_type(a_u, _I32) + d["imm"]
-        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
-        vals = s.regs[tid, d["rd"]]
-        # single write port, sequential in thread order => last active
-        # thread writing an address wins. Keep only each address's last
-        # active writer, then scatter (indices now unique).
-        same = addr[:, None] == addr[None, :]
-        later = tid[:, None] < tid[None, :]
-        superseded = (same & later & active[None, :]).any(axis=1)
-        do_write = active & ~superseded & ~bad
-        safe = jnp.where(do_write, addr, cfg.shmem_depth)  # drop slot
-        shmem = s.shmem.at[safe].set(vals, mode="drop")
-        return s.replace(shmem=shmem, oob=s.oob | bad.any())
-
-    def h_lodi(s):
-        as_f = _bitcast_u32(d["imm"].astype(_F32))
-        val = jnp.where(is_fp, as_f, d["imm"].astype(_U32))
-        vals = jnp.broadcast_to(val, (MAX_THREADS,))
-        return s.replace_regs(write_active(s.regs, d["rd"], vals, active))
-
-    def h_td(s):
-        x = (tid % cfg.dim_x).astype(_U32)
-        y = (tid // cfg.dim_x).astype(_U32)
-        vals = jnp.where(op == int(Op.TDX), x, y)
-        return s.replace_regs(write_active(s.regs, d["rd"], vals, active))
-
-    def h_red(s):
-        # DOT/SUM: reduce each active wavefront across its active lanes,
-        # write the result to lane 0 of that wavefront (the first SP).
-        lane_active = active.reshape(MAX_WAVES, N_SP)
-        a2 = a_f.reshape(MAX_WAVES, N_SP)
-        b2 = b_f.reshape(MAX_WAVES, N_SP)
-        prod = jnp.where(op == int(Op.DOT), a2 * b2, a2 + b2)
-        red = jnp.sum(jnp.where(lane_active, prod, 0.0), axis=1)  # (waves,)
-        wave_active = lane_active.any(axis=1)
-        dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP  # lane 0 of each wave
-        cur = s.regs[dest, d["rd"]]
-        new = jnp.where(wave_active, _bitcast_u32(red), cur)
-        return s.replace_regs(s.regs.at[dest, d["rd"]].set(new))
-
-    def h_sfu(s):
-        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source)
-        src_tid = jnp.where(snoop, d["ext_a"] * N_SP, 0)
-        val = _bitcast_f32(s.regs[src_tid, d["ra"]])
-        r = jax.lax.rsqrt(val)
-        return s.replace_regs(s.regs.at[0, d["rd"]].set(_bitcast_u32(r)))
-
-    def h_ctl(s):
-        imm = d["imm_raw"]
-        pc1 = s.pc + 1
-        # LOOP: decrement top counter; jump while > 1, pop at 1
-        lsp = jnp.clip(s.loop_sp - 1, 0, LOOP_STACK_DEPTH - 1)
-        top = s.loop_ctr[lsp]
-        loop_taken = top > 1
-        new_pc = jnp.select(
-            [op == int(Op.JMP), op == int(Op.JSR), op == int(Op.RTS),
-             op == int(Op.LOOP)],
-            [imm, imm,
-             s.ret_stack[jnp.clip(s.ret_sp - 1, 0, RET_STACK_DEPTH - 1)],
-             jnp.where(loop_taken, imm, pc1)],
-            pc1)
-        ret_stack = jnp.where(
-            op == int(Op.JSR),
-            s.ret_stack.at[jnp.clip(s.ret_sp, 0, RET_STACK_DEPTH - 1)].set(pc1),
-            s.ret_stack)
-        ret_sp = s.ret_sp + jnp.where(op == int(Op.JSR), 1, 0) \
-            - jnp.where(op == int(Op.RTS), 1, 0)
-        loop_ctr = jnp.where(
-            op == int(Op.INIT),
-            s.loop_ctr.at[jnp.clip(s.loop_sp, 0, LOOP_STACK_DEPTH - 1)].set(imm),
-            jnp.where(op == int(Op.LOOP),
-                      s.loop_ctr.at[lsp].set(top - 1), s.loop_ctr))
-        loop_sp = s.loop_sp \
-            + jnp.where(op == int(Op.INIT), 1, 0) \
-            - jnp.where((op == int(Op.LOOP)) & ~loop_taken, 1, 0)
-        halted = s.halted | (op == int(Op.STOP))
-        return s.replace(pc=new_pc, ret_stack=ret_stack, ret_sp=ret_sp,
-                         loop_ctr=loop_ctr, loop_sp=loop_sp, halted=halted,
-                         _skip_pc=True)
-
-    # MachineState is a frozen-ish dataclass pytree; add tiny helpers
-    handlers = [h_nop, h_alu, h_lod, h_sto, h_lodi, h_td, h_red, h_sfu, h_ctl]
-    group = jnp.asarray(_GROUP_OF_OP)[op]
-    s2 = jax.lax.switch(group, handlers, s)
-
-    # ---- pc advance (control group already set it) --------------------------
-    is_ctl = group == _G_CTL
-    pc = jnp.where(is_ctl, s2.pc, s.pc + 1)
-
-    # ---- cycle accounting ----------------------------------------------------
-    act_threads = act_waves * act_wthreads
-    one = jnp.int32(1)
-    cyc = jnp.select(
-        [group == _G_LOD, group == _G_STO,
-         (group == _G_NOP) | (group == _G_CTL) | (group == _G_SFU)],
-        [jnp.maximum(one, (act_threads + 3) // 4), act_threads, one],
-        act_waves)
-    klass = jnp.asarray(_CLASS_OF)[op, typ]
-    return MachineState(
-        regs=s2.regs, shmem=s2.shmem, pc=pc,
-        ret_stack=s2.ret_stack, ret_sp=s2.ret_sp,
-        loop_ctr=s2.loop_ctr, loop_sp=s2.loop_sp,
-        halted=s2.halted, oob=s2.oob,
-        steps=s.steps + 1,
-        cycles=s.cycles + cyc,
-        cycles_by_class=s.cycles_by_class.at[klass].add(cyc),
-    )
+_EXECUTE_BACKENDS: dict[str, ExecuteBackend] = {}
 
 
-# small pytree-update helpers on MachineState ---------------------------------
-
-def _ms_replace(self: MachineState, _skip_pc: bool = False, **kw) -> MachineState:
-    import dataclasses
-    return dataclasses.replace(self, **kw)
-
-
-def _ms_replace_regs(self: MachineState, regs) -> MachineState:
-    import dataclasses
-    return dataclasses.replace(self, regs=regs)
+def register_execute_backend(name: str):
+    def deco(fn: ExecuteBackend) -> ExecuteBackend:
+        _EXECUTE_BACKENDS[name] = fn
+        return fn
+    return deco
 
 
-MachineState.replace = _ms_replace          # type: ignore[attr-defined]
-MachineState.replace_regs = _ms_replace_regs  # type: ignore[attr-defined]
+def get_execute_backend(name: str) -> ExecuteBackend:
+    try:
+        return _EXECUTE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown execute backend {name!r}; "
+            f"available: {sorted(_EXECUTE_BACKENDS)}") from None
+
+
+def execute_backends() -> tuple[str, ...]:
+    return tuple(sorted(_EXECUTE_BACKENDS))
+
+
+@register_execute_backend("inline")
+def _inline_execute(op, typ, a, b, mask, old) -> jax.Array:
+    """Straight-jnp execute stage (the ``kernels.ref`` oracle)."""
+    from ..kernels.ref import alu_ref
+
+    return jnp.where(mask, alu_ref(op, typ, a, b), old)
+
+
+@register_execute_backend("pallas")
+def _pallas_execute(op, typ, a, b, mask, old) -> jax.Array:
+    """Pallas execute stage: one ``simt_alu`` grid over the SM batch."""
+    from ..kernels import ops
+    from ..kernels.simt_alu import simt_alu
+
+    n_sm = a.shape[0]
+    # largest tile that divides the batch, capped at 8 SMs (80 KiB VMEM)
+    block_sm = max(d for d in range(1, min(8, n_sm) + 1) if n_sm % d == 0)
+    return simt_alu(op.astype(_I32), typ.astype(_I32), a, b,
+                    mask.astype(_U32), old,
+                    interpret=ops.INTERPRET, block_sm=block_sm)
 
 
 # ---------------------------------------------------------------------------
-# public entry points
+# public entry points (single-wave shims over the device layer)
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run_jit(cfg: SMConfig, imem_lo, imem_hi, state: MachineState) -> MachineState:
-    def cond(s):
-        return (~s.halted) & (s.steps < cfg.max_steps) \
-            & (s.pc >= 0) & (s.pc < cfg.imem_depth)
-
-    def body(s):
-        return _step(cfg, imem_lo, imem_hi, s)
-
-    return jax.lax.while_loop(cond, body, state)
-
 
 def run(cfg: SMConfig, program, shmem: np.ndarray | None = None,
-        state: MachineState | None = None) -> MachineState:
-    """Assemble-and-run convenience wrapper. ``program`` is a Program or
-    an ndarray of encoded 40-bit words."""
+        state: MachineState | None = None, *,
+        backend: str = "inline") -> MachineState:
+    """Assemble-and-run convenience wrapper: ONE SM, one thread block.
+
+    ``program`` is a Program or an ndarray of encoded 40-bit words.
+    Implemented as a single-block wave on the device layer; use
+    ``device.launch`` for grids, global memory, and multi-SM runs.
+    """
+    from . import device
+
     words = program.words if hasattr(program, "words") else np.asarray(program)
     lo, hi = pack_imem(words, cfg.imem_depth)
     if state is None:
-        state = init_state(cfg, shmem)
-    return _run_jit(cfg, jnp.asarray(lo), jnp.asarray(hi), state)
+        dstate = device.init_device_state(cfg, n_sms=1, shmem=shmem)
+    else:
+        dstate = device.lift_machine_state(state)
+    fin = device.run_wave(cfg, backend, jnp.asarray(lo), jnp.asarray(hi),
+                          jnp.zeros((1,), _I32), dstate)
+    return device.squeeze_device_state(fin)
 
 
-def run_many(cfg: SMConfig, program, shmem_batch: np.ndarray) -> MachineState:
-    """vmapped multi-SM execution: one eGPU instance per shared-memory image
-    (the quad-packed sector of §III.E, generalized to N instances)."""
+def run_many(cfg: SMConfig, program, shmem_batch: np.ndarray, *,
+             backend: str = "inline") -> MachineState:
+    """Multi-SM execution: one eGPU instance per shared-memory image (the
+    quad-packed sector of §III.E, generalized to N instances).
+
+    Backward-compatibility shim over ``device.launch``: every instance runs
+    the same program as one device wave, and the returned ``MachineState``
+    carries a leading batch axis on every field (the historical vmapped
+    layout). New code should call ``device.launch`` directly.
+    """
+    from . import device
+
+    shmem_batch = jnp.asarray(shmem_batch)
+    n_sms = int(shmem_batch.shape[0])
     words = program.words if hasattr(program, "words") else np.asarray(program)
     lo, hi = pack_imem(words, cfg.imem_depth)
-    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
-    states = jax.vmap(lambda sh: init_state(cfg, sh))(jnp.asarray(shmem_batch))
-    return jax.jit(jax.vmap(lambda st: _run_jit(cfg, lo, hi, st)))(states)
+    dstate = device.init_device_state(cfg, n_sms=n_sms, shmem=shmem_batch)
+    fin = device.run_wave(cfg, backend, jnp.asarray(lo), jnp.asarray(hi),
+                          jnp.arange(n_sms, dtype=_I32), dstate)
+    # historical layout: every field vmapped over the SM batch
+    b = lambda x: jnp.broadcast_to(x, (n_sms,) + x.shape)
+    return MachineState(
+        regs=fin.regs, shmem=fin.shmem,
+        pc=b(fin.pc), ret_stack=b(fin.ret_stack), ret_sp=b(fin.ret_sp),
+        loop_ctr=b(fin.loop_ctr), loop_sp=b(fin.loop_sp),
+        halted=b(fin.halted), oob=fin.oob,
+        steps=b(fin.steps), cycles=b(fin.cycles),
+        cycles_by_class=b(fin.cycles_by_class),
+    )

@@ -40,7 +40,11 @@ F_EXT_B = (5, 5)   # bits [9:5]
 
 
 class Op(enum.IntEnum):
-    """Opcodes. 23 architectural instructions (Table II) + NOP."""
+    """Opcodes. 23 architectural instructions (Table II) + NOP, plus the
+    multi-SM device extension (GLD/GST/BID): a global-memory segment shared
+    by every SM in a packed sector, and the block index for CUDA-style
+    grid/block addressing (the multi-eGPU packing of §III.E / the scalable
+    follow-up paper)."""
 
     NOP = 0
     # Arithmetic (typed: INT32 / UINT32 / FP32)
@@ -73,6 +77,10 @@ class Op(enum.IntEnum):
     LOOP = 21
     INIT = 22
     STOP = 23
+    # Multi-SM device extension (not in the single-SM paper ISA)
+    GLD = 24   # GLD Rd (Ra)+offset — global-memory load (shared across SMs)
+    GST = 25   # GST Rd (Ra)+offset — global-memory store
+    BID = 26   # BID Rd — thread-block index within the launch grid
 
 
 class Typ(enum.IntEnum):
@@ -110,8 +118,13 @@ CLASS_NAMES = (
     "FP_SFU",     # 8
     "STO_IDX",    # 9
     "CONTROL",    # 10 (JMP/JSR/RTS/LOOP/INIT/STOP)
+    "GMEM",       # 11 (GLD/GST: single-port global memory, shared by SMs)
 )
 NUM_CLASSES = len(CLASS_NAMES)
+
+# opcodes whose immediate is an unsigned I-MEM address (decode does not
+# sign-extend these); everything else carries a signed 14-bit immediate
+CONTROL_IMM_OPS = frozenset({Op.JMP, Op.JSR, Op.LOOP, Op.INIT})
 
 
 def _check(val: int, nbits: int, name: str) -> int:
@@ -163,8 +176,16 @@ class Instr:
             word = _put(word, F_EXT_B, self.ext_b, "ext_b")
         else:
             imm = self.imm
-            if not -(1 << 14) <= imm < (1 << 15):
-                raise ValueError(f"immediate {imm} out of range for 15 bits")
+            if self.op in CONTROL_IMM_OPS:
+                # control-flow addresses: unsigned, full 15 bits
+                if not 0 <= imm < (1 << 15):
+                    raise ValueError(
+                        f"control address {imm} out of range for 15 bits")
+            elif not -(1 << 14) <= imm < (1 << 14):
+                # signed immediates: decode sign-extends bit 14, so encode
+                # must reject [2^14, 2^15) or the value round-trips negative
+                raise ValueError(
+                    f"immediate {imm} out of range for signed 15 bits")
             word = _put(word, F_IMM, imm & 0x7FFF, "imm")
         return word
 
@@ -175,7 +196,7 @@ class Instr:
         imm = raw_imm - (1 << 15) if (raw_imm & (1 << 14)) else raw_imm
         op = Op(get(word, F_OPCODE))
         # control-flow addresses are unsigned
-        if op in (Op.JMP, Op.JSR, Op.LOOP, Op.INIT):
+        if op in CONTROL_IMM_OPS:
             imm = raw_imm
         return Instr(
             op=op,
@@ -204,7 +225,7 @@ def instr_class(op: Op, typ: Typ) -> int:
         if typ == Typ.FP32:
             return 6 if op == Op.MUL else 5
         return 3
-    if op in (Op.TDX, Op.TDY):
+    if op in (Op.TDX, Op.TDY, Op.BID):
         return 3
     if op == Op.LOD:
         return 4
@@ -214,6 +235,8 @@ def instr_class(op: Op, typ: Typ) -> int:
         return 7
     if op == Op.INVSQR:
         return 8
+    if op in (Op.GLD, Op.GST):
+        return 11
     return 10  # control
 
 

@@ -68,6 +68,33 @@ class MachineState:
     cycles: jax.Array      # () int32 — sequencer cycles (cost model)
     cycles_by_class: jax.Array  # (NUM_CLASSES,) int32
 
+    def replace(self, **kw) -> "MachineState":
+        return dataclasses.replace(self, **kw)
+
+    def replace_regs(self, regs) -> "MachineState":
+        return dataclasses.replace(self, regs=regs)
+
+
+def as_u32_image(arr, depth: int, what: str = "memory") -> jax.Array:
+    """Coerce a host array to a (..., depth) uint32 memory image.
+
+    float32 input is bitcast (the eGPU memory system is typeless 32-bit
+    words); shorter images are zero-padded on the last axis. Shared by
+    ``init_state`` (per-SM shared memory) and the device layer (per-block
+    shared-memory batches and the global-memory segment).
+    """
+    a = jnp.asarray(arr)
+    if a.dtype in (jnp.float32, np.float32):
+        a = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.uint32)
+    a = a.astype(jnp.uint32)
+    pad = depth - a.shape[-1]
+    if pad < 0:
+        raise ValueError(f"{what} image of {a.shape[-1]} words exceeds "
+                         f"depth {depth}")
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+    return a
+
 
 def init_state(cfg: SMConfig, shmem: np.ndarray | None = None) -> MachineState:
     from .isa import NUM_CLASSES
@@ -75,15 +102,7 @@ def init_state(cfg: SMConfig, shmem: np.ndarray | None = None) -> MachineState:
     if shmem is None:
         sh = jnp.zeros((cfg.shmem_depth,), jnp.uint32)
     else:
-        sh = jnp.asarray(shmem)
-        if sh.dtype in (jnp.float32, np.float32):
-            sh = jax.lax.bitcast_convert_type(sh.astype(jnp.float32), jnp.uint32)
-        sh = sh.astype(jnp.uint32)
-        if sh.shape != (cfg.shmem_depth,):
-            pad = cfg.shmem_depth - sh.shape[0]
-            if pad < 0:
-                raise ValueError(f"shared-memory image larger than {cfg.shmem_depth}")
-            sh = jnp.pad(sh, (0, pad))
+        sh = as_u32_image(shmem, cfg.shmem_depth, "shared-memory")
     return MachineState(
         regs=jnp.zeros((MAX_THREADS, N_REGS), jnp.uint32),
         shmem=sh,

@@ -28,6 +28,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble
+from ..device import DeviceConfig, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -174,3 +175,31 @@ def run_fft(x: np.ndarray, unroll: bool = False, pad_hazards: bool = True):
     out = np.empty(n, dtype=np.complex64)
     out[bitrev_indices(n)] = out_br  # undo DIF bit-reversal
     return out, state
+
+
+def run_fft_batch(xs: np.ndarray, device: DeviceConfig | None = None,
+                  unroll: bool = False, backend: str | None = None
+                  ) -> tuple[np.ndarray, LaunchResult]:
+    """Batched FFT on the device layer: one n-point FFT per thread block.
+
+    ``xs`` is (batch, n) complex; each signal becomes one block's private
+    shared-memory image and the grid is scheduled onto the device's SMs in
+    waves — the §III.E packed-sector deployment (four independent FFTs per
+    sector) generalized to any batch. Returns (X batch, LaunchResult).
+    """
+    xs = np.asarray(xs)
+    batch, n = int(xs.shape[0]), int(xs.shape[1])
+    n_threads = n // 2
+    if device is None:
+        device = DeviceConfig(sm=SMConfig(shmem_depth=max(3 * n, 64),
+                                          max_steps=200_000))
+    prog = fft_program(n, unroll)
+    images = np.stack([fft_shmem(xs[b], device.sm.shmem_depth)
+                       for b in range(batch)])
+    res = launch(device, prog, grid=(batch,), block=n_threads,
+                 shmem=images, backend=backend)
+    mem = np.asarray(res.shmem_f32())
+    out_br = mem[:, 0:2 * n:2] + 1j * mem[:, 1:2 * n:2]
+    out = np.empty((batch, n), dtype=np.complex64)
+    out[:, bitrev_indices(n)] = out_br
+    return out, res

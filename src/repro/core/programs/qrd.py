@@ -53,6 +53,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble, auto_nop
+from ..device import DeviceConfig, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -168,3 +169,27 @@ def run_qrd(a: np.ndarray, loop: bool = False, **kw):
     q = mem[Q_BASE:Q_BASE + 256].reshape(16, 16).T  # col-major -> (i,k)
     r = mem[R_BASE:R_BASE + 256].reshape(16, 16)    # row-major
     return q, r, state
+
+
+def run_qrd_batch(As: np.ndarray, device: DeviceConfig | None = None,
+                  loop: bool = False, backend: str | None = None,
+                  **kw) -> tuple[np.ndarray, np.ndarray, LaunchResult]:
+    """Batched 16x16 MGS QRD on the device layer: one matrix per block.
+
+    ``As`` is (batch, 16, 16); each factorization runs in its own block's
+    private shared memory, scheduled onto the SMs in waves. Returns
+    (Q batch, R batch, LaunchResult).
+    """
+    As = np.asarray(As)
+    batch = int(As.shape[0])
+    if device is None:
+        device = DeviceConfig(sm=SMConfig(shmem_depth=1024, imem_depth=1024,
+                                          max_steps=200_000))
+    images = np.stack([qrd_shmem(As[b], device.sm.shmem_depth)
+                       for b in range(batch)])
+    res = launch(device, qrd_program(loop, **kw), grid=(batch,), block=256,
+                 shmem=images, dim_x=16, backend=backend)
+    mem = np.asarray(res.shmem_f32())
+    q = mem[:, Q_BASE:Q_BASE + 256].reshape(batch, 16, 16).transpose(0, 2, 1)
+    r = mem[:, R_BASE:R_BASE + 256].reshape(batch, 16, 16)
+    return q, r, res

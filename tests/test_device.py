@@ -1,0 +1,285 @@
+"""Multi-SM device layer tests: wave scheduling, global memory, the
+pluggable execute backends, and the run_many backward-compat shim."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    DeviceConfig,
+    SMConfig,
+    assemble,
+    execute_backends,
+    launch,
+    run,
+    run_many,
+)
+from repro.core.assembler import auto_nop
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+
+RNG = np.random.default_rng(7)
+
+
+def _dcfg(n_sms=4, gdepth=256, **sm_kw):
+    sm_kw.setdefault("max_steps", 2000)
+    return DeviceConfig(n_sms=n_sms, global_mem_depth=gdepth,
+                        sm=SMConfig(**sm_kw))
+
+
+# ---------------------------------------------------------------------------
+# block scheduling
+# ---------------------------------------------------------------------------
+
+def test_backends_registered():
+    assert set(execute_backends()) >= {"inline", "pallas"}
+
+
+def test_grid_schedules_in_waves():
+    # 8 blocks on 4 SMs -> two rounds; 9 blocks -> three (last one partial)
+    prog = assemble("BID R1\nSTO R1, (R0)+0 {w1,d1}\nSTOP")
+    res = launch(_dcfg(), prog, grid=(8,), block=16)
+    assert res.n_waves == 2 and res.n_blocks == 8
+    assert res.cycles == int(res.wave_cycles.sum())
+    res9 = launch(_dcfg(), prog, grid=(9,), block=16)
+    assert res9.n_waves == 3
+    # every block saw its own grid index through BID
+    np.testing.assert_array_equal(np.asarray(res9.shmem[:, 0]), np.arange(9))
+
+
+def test_block_private_shared_memory():
+    # per-block shmem images stay private: each block doubles its own data
+    prog = assemble(auto_nop("""
+        TDX R1
+        LOD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        STO R3, (R1)+16
+        STOP
+    """, 16))
+    images = RNG.standard_normal((6, 64)).astype(np.float32)
+    res = launch(_dcfg(n_sms=4), prog, grid=(6,), block=16, shmem=images)
+    out = np.asarray(res.shmem_f32())
+    np.testing.assert_array_equal(out[:, 16:32], 2 * images[:, :16])
+    assert res.halted and not bool(np.asarray(res.oob).any())
+
+
+# ---------------------------------------------------------------------------
+# global memory
+# ---------------------------------------------------------------------------
+
+def test_gmem_visible_across_sms_and_waves():
+    # each block writes (bid+1)*7 to gmem[bid]; then reads gmem[0] — written
+    # by a DIFFERENT SM (same wave, blocks 1-3) or a PREVIOUS wave (4-7) —
+    # and echoes it to gmem[16+bid].
+    prog = assemble(auto_nop("""
+        BID R7
+        LOD R2, #7
+        LOD R5, #1
+        ADD.INT32 R8, R7, R5
+        MUL.INT32 R3, R8, R2      // (bid+1)*7
+        GST R3, (R7)+0 {w1,d1}    // gmem[bid]
+        GLD R4, (R0)+0 {w1,d1}    // gmem[0] = 7, written by block 0
+        GST R4, (R7)+16 {w1,d1}
+        STOP
+    """, 16))
+    res = launch(_dcfg(), prog, grid=(8,), block=16)
+    gmem = np.asarray(res.gmem).astype(np.int64)
+    np.testing.assert_array_equal(gmem[:8], 7 * (np.arange(8) + 1))
+    np.testing.assert_array_equal(gmem[16:24], np.full(8, 7))
+
+
+def test_gst_collision_last_sm_wins():
+    # every block stores bid+1 to gmem[5]: the single device-wide port
+    # drains in (sm, thread) order, so the wave's LAST block wins; across
+    # waves the later wave overwrites.
+    prog = assemble(auto_nop("""
+        BID R1
+        LOD R2, #1
+        ADD.INT32 R3, R1, R2
+        GST R3, (R0)+5 {w1,d1}
+        STOP
+    """, 16))
+    res = launch(_dcfg(n_sms=4), prog, grid=(6,), block=16)
+    assert int(np.asarray(res.gmem)[5]) == 6  # block 5 (wave 2's last)
+
+
+def test_gmem_oob_flagged_per_block():
+    prog = assemble("LOD R1, #4095\nGST R1, (R1)+0\nSTOP")
+    res = launch(_dcfg(gdepth=64), prog, grid=(3,), block=16)
+    assert bool(np.asarray(res.oob).all())
+
+
+def test_device_step_matches_host_cycle_model():
+    # the traced cost model in device._device_step must agree with the
+    # host-side statement in cycles.instr_cycles for every class, incl.
+    # the n_sms-contended GMEM row
+    from repro.core.cycles import instr_cycles
+    from repro.core.isa import CLASS_NAMES, instr_class
+
+    n_sms, block = 3, 64
+    cases = [
+        Instr(op=Op.ADD, typ=Typ.FP32, rd=1, ra=2, rb=3),
+        Instr(op=Op.LOD, rd=1, ra=0, imm=0),
+        Instr(op=Op.STO, rd=1, ra=0, imm=0),
+        Instr(op=Op.GLD, rd=1, ra=0, imm=0),
+        Instr(op=Op.GST, rd=1, ra=0, imm=0, width=Width.SINGLE,
+              depth=Depth.SINGLE),
+        Instr(op=Op.LODI, rd=1, imm=5),
+        Instr(op=Op.DOT, typ=Typ.FP32, rd=1, ra=2, rb=3),
+        Instr(op=Op.INVSQR, typ=Typ.FP32, rd=1, ra=2),
+        Instr(op=Op.NOP),
+    ]
+    for ins in cases:
+        words = np.array([ins.encode(), Instr(op=Op.STOP).encode()], np.int64)
+        res = launch(_dcfg(n_sms=n_sms, shmem_depth=64, gdepth=64), words,
+                     grid=(n_sms,), block=block)
+        klass = CLASS_NAMES[instr_class(ins.op, ins.typ)]
+        assert res.profile()["by_class"][klass] \
+            == instr_cycles(ins, block, n_sms), ins.op.name
+
+
+def test_gmem_single_port_contention_cycles():
+    # GLD on a 4-SM wave serializes: class GMEM pays n_sms * threads
+    prog = assemble("GLD R1, (R0)+0\nSTOP")
+    res = launch(_dcfg(n_sms=4), prog, grid=(4,), block=16)
+    assert res.profile()["by_class"]["GMEM"] == 4 * 16
+    # a single-block wave pays just its own threads
+    res1 = launch(_dcfg(n_sms=4), prog, grid=(1,), block=16)
+    assert res1.profile()["by_class"]["GMEM"] == 16
+
+
+def test_buffers_layout_and_readback():
+    x = np.arange(32, dtype=np.float32)
+    prog = assemble(auto_nop("""
+        TDX R1
+        GLD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        GST R3, (R1)+32
+        STOP
+    """, 32))
+    res = launch(_dcfg(n_sms=2, gdepth=128), prog, grid=(1,), block=32,
+                 buffers={"x": x, "y": np.zeros(32, np.float32)})
+    assert res.buffer_offsets == {"x": (0, 32), "y": (32, 32)}
+    np.testing.assert_array_equal(np.asarray(res.buffer("y")), 2 * x)
+
+
+# ---------------------------------------------------------------------------
+# execute backends: Pallas vs inline bit-exactness
+# ---------------------------------------------------------------------------
+
+_ALU_OPS = [Op.ADD, Op.SUB, Op.MUL, Op.AND, Op.OR, Op.XOR, Op.NOT,
+            Op.LSL, Op.LSR]
+
+
+def _random_program(rng, n_instr=10):
+    """Random straightline mix of ALU/LODI/LOD/STO/TDX/BID instructions.
+
+    The ISS executes architecturally (no interlocks to trip), so hazard
+    padding is unnecessary for backend-equivalence checking.
+    """
+    instrs = []
+    for _ in range(n_instr):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            op = _ALU_OPS[rng.integers(0, len(_ALU_OPS))]
+            instrs.append(Instr(
+                op=op, typ=Typ(int(rng.integers(0, 3))),
+                rd=int(rng.integers(0, 16)), ra=int(rng.integers(0, 16)),
+                rb=int(rng.integers(0, 16)),
+                width=Width(int(rng.integers(0, 4))),
+                depth=Depth(int(rng.integers(0, 4)))))
+        elif kind == 1:
+            instrs.append(Instr(op=Op.LODI, typ=Typ(int(rng.integers(0, 3))),
+                                rd=int(rng.integers(0, 16)),
+                                imm=int(rng.integers(-100, 100))))
+        elif kind == 2:
+            instrs.append(Instr(op=Op.LOD, rd=int(rng.integers(0, 16)),
+                                ra=0, imm=int(rng.integers(0, 32))))
+        else:
+            instrs.append(Instr(op=rng.choice([Op.TDX, Op.BID]),
+                                rd=int(rng.integers(0, 16))))
+    instrs.append(Instr(op=Op.STO, rd=1, ra=2, imm=0))
+    instrs.append(Instr(op=Op.STOP))
+    return np.array([i.encode() for i in instrs], np.int64)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pallas_inline_bit_exact_random_corpus(seed):
+    rng = np.random.default_rng(seed)
+    words = _random_program(rng)
+    images = rng.standard_normal((3, 64)).astype(np.float32)
+    dcfg = _dcfg(n_sms=2, shmem_depth=64)
+    outs = {}
+    for backend in ("inline", "pallas"):
+        outs[backend] = launch(dcfg, words, grid=(3,), block=32,
+                               shmem=images, backend=backend)
+    a, b = outs["inline"], outs["pallas"]
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+    np.testing.assert_array_equal(np.asarray(a.shmem), np.asarray(b.shmem))
+    np.testing.assert_array_equal(np.asarray(a.gmem), np.asarray(b.gmem))
+    assert a.cycles == b.cycles and a.steps == b.steps
+
+
+def test_acceptance_two_waves_bit_identical():
+    # the PR acceptance case: grid=(8,) block=512 on a 4-SM device
+    prog = assemble(auto_nop("""
+        BID R7
+        TDX R1
+        LOD R2, (R1)+0
+        MUL.FP32 R3, R2, R2
+        ADD.INT32 R4, R1, R7
+        STO R3, (R1)+512
+        STOP
+    """, 512))
+    images = RNG.standard_normal((8, 1024)).astype(np.float32)
+    dcfg = _dcfg(n_sms=4, shmem_depth=1024)
+    res_i = launch(dcfg, prog, grid=(8,), block=512, shmem=images,
+                   backend="inline")
+    res_p = launch(dcfg, prog, grid=(8,), block=512, shmem=images,
+                   backend="pallas")
+    assert res_i.n_waves == 2 and res_i.regs.shape[0] == 8
+    assert res_i.halted and res_p.halted
+    np.testing.assert_array_equal(np.asarray(res_i.regs),
+                                  np.asarray(res_p.regs))
+    np.testing.assert_array_equal(np.asarray(res_i.shmem),
+                                  np.asarray(res_p.shmem))
+    p = res_i.profile()
+    assert p["total_cycles"] == res_i.cycles == res_p.cycles
+    assert len(p["wave_cycles"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# backward compatibility
+# ---------------------------------------------------------------------------
+
+def test_run_many_shim_matches_per_instance_run():
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=100)
+    prog = assemble(auto_nop("""
+        TDX R1
+        LOD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        STO R3, (R1)+16
+        STOP
+    """, 16))
+    shmems = RNG.standard_normal((4, 64)).astype(np.float32)
+    states = run_many(cfg, prog, shmems)
+    # historical vmapped layout: leading batch axis on every field
+    assert states.regs.shape[0] == states.shmem.shape[0] == 4
+    assert states.halted.shape == (4,) and bool(states.halted.all())
+    for b in range(4):
+        st = run(cfg, prog, shmems[b])
+        np.testing.assert_array_equal(np.asarray(states.regs[b]),
+                                      np.asarray(st.regs))
+        np.testing.assert_array_equal(np.asarray(states.shmem[b]),
+                                      np.asarray(st.shmem))
+        assert int(states.cycles[b]) == int(st.cycles)
+
+
+def test_run_accepts_initial_state():
+    from repro.core import init_state
+
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=100)
+    sh = np.arange(64, dtype=np.float32)
+    state0 = init_state(cfg, sh)
+    st = run(cfg, assemble("TDX R1\nSTO R1, (R1)+32\nSTOP"), state=state0)
+    out = np.asarray(jax.lax.bitcast_convert_type(st.shmem, np.int32))
+    np.testing.assert_array_equal(out[32:48], np.arange(16))

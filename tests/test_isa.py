@@ -6,7 +6,16 @@ from hypothesis import strategies as st
 
 from repro.core import assemble, check_hazards, disassemble
 from repro.core.assembler import AsmError, assemble_line
-from repro.core.isa import Depth, Instr, Op, Typ, Width, instr_class
+from repro.core.isa import (
+    CONTROL_IMM_OPS,
+    NUM_CLASSES,
+    Depth,
+    Instr,
+    Op,
+    Typ,
+    Width,
+    instr_class,
+)
 
 
 def test_encode_decode_roundtrip_basic():
@@ -57,6 +66,39 @@ def test_snoop_excludes_immediate():
 def test_imm_range_checked():
     with pytest.raises(ValueError):
         Instr(op=Op.LODI, imm=1 << 15).encode()
+
+
+def test_signed_imm_rejects_sign_extension_range():
+    # regression: encode used to accept [2^14, 2^15) for signed-immediate
+    # ops, but decode sign-extends bit 14, so those values round-tripped
+    # negative. The encode-time check now matches decode.
+    for op in (Op.LODI, Op.LOD, Op.STO, Op.GLD, Op.GST, Op.ADD):
+        with pytest.raises(ValueError):
+            Instr(op=op, imm=1 << 14).encode()
+        with pytest.raises(ValueError):
+            Instr(op=op, imm=(1 << 15) - 1).encode()
+        # the boundary values round-trip exactly
+        for imm in (-(1 << 14), (1 << 14) - 1, -1, 0):
+            assert Instr.decode(Instr(op=op, imm=imm).encode()).imm == imm
+
+
+def test_control_imm_full_unsigned_range():
+    for op in CONTROL_IMM_OPS:
+        assert Instr.decode(Instr(op=op, imm=(1 << 15) - 1).encode()).imm \
+            == (1 << 15) - 1
+        with pytest.raises(ValueError):
+            Instr(op=op, imm=1 << 15).encode()
+        with pytest.raises(ValueError):
+            Instr(op=op, imm=-1).encode()
+
+
+def test_new_device_ops_roundtrip():
+    for op in (Op.GLD, Op.GST):
+        ins = Instr(op=op, rd=3, ra=5, imm=-17, width=Width.SINGLE,
+                    depth=Depth.SINGLE)
+        assert Instr.decode(ins.encode()) == ins
+    ins = Instr(op=Op.BID, rd=9)
+    assert Instr.decode(ins.encode()) == ins
 
 
 def test_assemble_basic_program():
@@ -114,7 +156,7 @@ def test_disassemble_smoke():
 @settings(max_examples=100, deadline=None)
 @given(op=st.sampled_from(list(Op)), typ=st.sampled_from(list(Typ)))
 def test_instr_class_total(op, typ):
-    assert 0 <= instr_class(op, typ) < 11
+    assert 0 <= instr_class(op, typ) < NUM_CLASSES
 
 
 def test_hazard_checker_flags_raw():

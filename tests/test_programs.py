@@ -159,3 +159,69 @@ def test_saxpy():
     y = RNG.standard_normal(128).astype(np.float32)
     z, _ = run_saxpy(-1.5, x, y)
     np.testing.assert_allclose(z, -1.5 * x + y, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# launch-API (multi-SM device) variants
+# ---------------------------------------------------------------------------
+
+def _small_device(n_sms=2, gdepth=4096, **sm_kw):
+    from repro.core import DeviceConfig, SMConfig
+
+    sm_kw.setdefault("max_steps", 50_000)
+    return DeviceConfig(n_sms=n_sms, global_mem_depth=gdepth,
+                        sm=SMConfig(**sm_kw))
+
+
+def test_launch_saxpy_grid():
+    from repro.core.programs.saxpy import launch_saxpy
+
+    x = RNG.standard_normal(192).astype(np.float32)
+    y = RNG.standard_normal(192).astype(np.float32)
+    z, res = launch_saxpy(0.75, x, y, device=_small_device(), block=64)
+    np.testing.assert_allclose(z, 0.75 * x + y, rtol=1e-6)
+    assert res.n_waves == 2  # 3 blocks on 2 SMs
+    with pytest.raises(ValueError):
+        launch_saxpy(1.0, np.zeros(8192, np.float32),
+                     np.zeros(8192, np.float32))  # immediate range
+
+
+@pytest.mark.parametrize("n", [16, 100, 512, 1600])
+def test_launch_reduction_grid(n):
+    from repro.core.programs.reduction import launch_reduction
+
+    x = RNG.standard_normal(n).astype(np.float32)
+    tot, res = launch_reduction(x, device=_small_device(), block=128)
+    assert abs(tot - x.sum()) < 1e-3 * max(1.0, abs(float(x.sum())))
+    assert res.halted
+
+
+def test_launch_reduction_rejects_immediate_overflow():
+    from repro.core.programs.reduction import launch_reduction
+
+    with pytest.raises(ValueError):
+        launch_reduction(np.ones(20_000, np.float32))
+
+
+def test_fft_batch_matches_numpy():
+    from repro.core.programs.fft import run_fft_batch
+
+    xs = (RNG.standard_normal((3, 64))
+          + 1j * RNG.standard_normal((3, 64))).astype(np.complex64)
+    X, res = run_fft_batch(xs, device=_small_device(shmem_depth=192,
+                                                    max_steps=200_000))
+    ref = np.fft.fft(xs, axis=1)
+    assert res.n_waves == 2 and res.halted
+    np.testing.assert_allclose(X, ref, rtol=0, atol=2e-5 * np.abs(ref).max())
+
+
+def test_qrd_batch_factorizes():
+    from repro.core.programs.qrd import run_qrd_batch
+
+    As = RNG.standard_normal((3, 16, 16)).astype(np.float32)
+    Q, R, res = run_qrd_batch(As, device=_small_device(
+        shmem_depth=1024, imem_depth=1024, max_steps=200_000))
+    assert res.n_waves == 2 and res.halted
+    for b in range(3):
+        np.testing.assert_allclose(Q[b] @ R[b], As[b], atol=5e-5)
+        np.testing.assert_allclose(Q[b].T @ Q[b], np.eye(16), atol=5e-5)
