@@ -51,6 +51,19 @@ def smoke() -> None:
         assert np.allclose(z, 3.0 * x + y), backend
         print(f"smoke_launch_{backend},0.0,waves={res.n_waves} "
               f"cycles={res.cycles}")
+    # one heterogeneous launch through the dynamic block scheduler
+    from repro.core.programs import launch_fft_qrd
+
+    rng = np.random.default_rng(0)
+    xs = (rng.standard_normal((2, 32))
+          + 1j * rng.standard_normal((2, 32))).astype(np.complex64)
+    As = rng.standard_normal((1, 16, 16)).astype(np.float32)
+    X, Q, R, mres = launch_fft_qrd(xs, As)
+    assert np.allclose(X, np.fft.fft(xs, axis=1), atol=1e-4)
+    assert np.allclose(np.einsum("bij,bjk->bik", Q, R), As, atol=1e-4)
+    assert mres.schedule == "dynamic" and mres.cycles <= mres.static_cycles
+    print(f"smoke_mixed_launch,0.0,dynamic={mres.cycles} "
+          f"static={mres.static_cycles}")
     print("smoke_ok,0.0,all benchmark entry points importable")
 
 

@@ -3,7 +3,11 @@
 Public API:
     SMConfig, MachineState, init_state   — single-SM machine model
     DeviceConfig, launch, LaunchResult   — multi-SM device layer (grid/block
-                                           launches, global memory, waves)
+                                           launches, global memory; single-
+                                           or multi-program via Kernel)
+    program_trace, schedule_blocks       — static block traces + the
+                                           static-wave / dynamic-queue
+                                           block schedulers
     assemble, disassemble, check_hazards — assembler
     run, run_many                        — jitted ISS (single-wave shims)
     execute_backends                     — pluggable ALU execute stages
@@ -11,14 +15,17 @@ Public API:
     resources                            — Tables I/V + §III.E analytic model
 """
 from .assembler import AsmError, Program, assemble, check_hazards, disassemble
+from .cycles import ProgramTrace, instr_cycles, program_trace
 from .device import (
     DeviceConfig,
     DeviceState,
+    Kernel,
     LaunchResult,
     buffer_layout,
     launch,
     pack_buffers,
 )
+from .scheduler import Schedule, schedule_blocks
 from .executor import (
     execute_backends,
     get_execute_backend,
@@ -42,8 +49,10 @@ from . import resources
 
 __all__ = [
     "AsmError", "Program", "assemble", "check_hazards", "disassemble",
-    "DeviceConfig", "DeviceState", "LaunchResult", "buffer_layout",
+    "ProgramTrace", "instr_cycles", "program_trace",
+    "DeviceConfig", "DeviceState", "Kernel", "LaunchResult", "buffer_layout",
     "launch", "pack_buffers",
+    "Schedule", "schedule_blocks",
     "pack_imem", "run", "run_many",
     "execute_backends", "get_execute_backend", "register_execute_backend",
     "CLASS_NAMES", "Depth", "Instr", "Op", "Typ", "Width",

@@ -10,7 +10,8 @@ Syntax (one instruction per line, ``//`` or ``;`` comments, ``label:`` lines):
     STO       R2, (R3)+0          // shared-memory indexed store
     GLD       R2, (R1)+5          // GLOBAL-memory load (shared across SMs)
     GST       R2, (R3)+0          // GLOBAL-memory store
-    BID       R7                  // thread-block index -> R7 (launch grid)
+    BID       R7                  // block index within the program's grid
+    PID       R6                  // program index (multi-program launch)
     LOD       R4, #128            // immediate load
     LOD.FP32  R4, #3              // immediate load, converted to 3.0f
     TDX       R1                  // thread id x -> R1
@@ -177,7 +178,7 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
             raise AsmError("LODI Rd, #imm", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
         kw.update(rd=rd, imm=int(operands[1][1:], 0))
-    elif op in (Op.TDX, Op.TDY, Op.BID):
+    elif op in (Op.TDX, Op.TDY, Op.BID, Op.PID):
         if len(operands) != 1:
             raise AsmError(f"{op.name} needs 1 operand", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
@@ -260,7 +261,7 @@ def disassemble(word: int) -> str:
         return f"{op.name} R{ins.rd}, (R{ins.ra})+{ins.imm}{m}"
     if op == Op.LODI:
         return f"LOD{t} R{ins.rd}, #{ins.imm}{m}"
-    if op in (Op.TDX, Op.TDY, Op.BID):
+    if op in (Op.TDX, Op.TDY, Op.BID, Op.PID):
         return f"{op.name} R{ins.rd}{m}"
     if op in (Op.JMP, Op.JSR, Op.LOOP):
         return f"{op.name} {ins.imm}"

@@ -31,15 +31,42 @@ Multi-SM device extension (GLD/GST): the global-memory segment lives
 outside the SMs, reached over the sector interconnect through a SINGLE
 read port and a SINGLE write port shared by every SM in the packed sector
 (the same single-port discipline as the shared-memory write path, but now
-device-wide). A global access therefore costs one cycle per active thread
-— and when ``n_sms`` SMs issue the access in lockstep, the port serializes
-them: ``n_sms * active_threads`` cycles. This is the packed-sector
-contention model used by the device-level cycle accounting in
-``device.py``.
+device-wide). A global access occupies the port for one cycle per active
+thread. Under the *static wave* schedule SMs execute in lockstep, so every
+SM's sequencer is held for the full serialized drain:
+``n_sms * active_threads`` cycles (``instr_cycles(..., n_sms=...)``).
+Under the *dynamic* schedule (``core.scheduler``) each SM's sequencer is
+occupied only for its own ``active_threads`` access; queueing behind other
+SMs shows up as per-SM port-wait time in the scheduler simulation instead
+of an inflated instruction cost.
+
+Static program traces
+---------------------
+The eGPU ISA has no data-dependent control flow — JMP/JSR/LOOP/INIT/RTS
+targets and trip counts are immediates, STOP is unconditional — so the
+sequence of instructions a sequencer issues (and hence the block's cycle
+cost) is a *static* property of the program. ``program_trace`` walks a
+program with a host-side sequencer (the same pc/loop-stack/return-stack
+semantics as ``device._device_step``, pinned together by
+``tests/test_device.py`` and ``tests/test_scheduler.py``) and returns the
+issued-instruction trace with per-instruction cycle costs. The device
+layer's block scheduler consumes these traces for per-SM timing.
 """
 from __future__ import annotations
 
-from .isa import Depth, Instr, Op, Width, WIDTH_THREADS
+import dataclasses
+import functools
+
+from .isa import (
+    Depth,
+    Instr,
+    NUM_CLASSES,
+    Op,
+    Width,
+    WIDTH_THREADS,
+    instr_class,
+)
+from .machine import LOOP_STACK_DEPTH, RET_STACK_DEPTH
 
 
 def active_shape(width: Width, depth: Depth, n_threads: int) -> tuple[int, int]:
@@ -76,5 +103,144 @@ def instr_cycles(ins: Instr, n_threads: int, n_sms: int = 1) -> int:
         return threads                       # 1 write port
     if op in (Op.GLD, Op.GST):
         return threads * max(1, n_sms)       # 1 global port, device-wide
-    # everything else is wavefront-paced: ALU, LODI, TDx/TDy/BID, DOT, SUM
+    # everything else is wavefront-paced: ALU, LODI, TDx/TDy/BID/PID,
+    # DOT, SUM
     return waves
+
+
+# ---------------------------------------------------------------------------
+# static program traces (the host-side per-SM sequencer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceInstr:
+    """One issued instruction in a block's static trace."""
+
+    op: Op
+    klass: int        # profile class (isa.CLASS_NAMES row)
+    cycles: int       # sequencer occupancy, n_sms=1 (= port occupancy
+                      # for GLD/GST: one word per cycle)
+    gmem: bool        # goes through the device-wide global-memory port
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramTrace:
+    """The full issued-instruction trace of one thread block.
+
+    Exact — not an approximation — because the ISA has no data-dependent
+    control flow: every block running this program at this ``n_threads``
+    issues exactly this sequence.
+    """
+
+    instrs: tuple[TraceInstr, ...]
+    halted: bool                    # reached STOP (vs. fuel / pc runaway)
+    n_threads: int
+
+    @property
+    def steps(self) -> int:
+        return len(self.instrs)
+
+    @functools.cached_property
+    def cycles(self) -> int:
+        """Busy cycles of the issuing sequencer (gmem at port occupancy)."""
+        return sum(t.cycles for t in self.instrs)
+
+    @functools.cached_property
+    def gmem_cycles(self) -> int:
+        """Cycles spent occupying the global-memory port."""
+        return sum(t.cycles for t in self.instrs if t.gmem)
+
+    def static_cycles(self, wave_n: int) -> int:
+        """Cycle cost in a HOMOGENEOUS lockstep wave: ``wave_n`` SMs issue
+        each global access simultaneously and the single port serializes
+        them, so every sequencer is held ``wave_n * threads`` per access.
+
+        This is the special case of the general wave rule (every block's
+        accesses drain behind every other wave member's:
+        ``cycles + other_gmem``, see ``scheduler._schedule_static``) for
+        ``wave_n`` identical traces.
+        """
+        return self.cycles + (wave_n - 1) * self.gmem_cycles
+
+    def cycles_by_class(self, wave_n: int = 1) -> list[int]:
+        """Per-class cycle totals (GMEM scaled by the wave width)."""
+        by = [0] * NUM_CLASSES
+        for t in self.instrs:
+            by[t.klass] += t.cycles * (wave_n if t.gmem else 1)
+        return by
+
+
+def _trace_walk(words: tuple[int, ...], n_threads: int, imem_depth: int,
+                max_steps: int) -> ProgramTrace:
+    decoded = [Instr.decode(w) for w in words]
+    stop = Instr(op=Op.STOP)                 # pack_imem pads I-MEM with STOP
+    ret_stack = [0] * RET_STACK_DEPTH
+    loop_ctr = [0] * LOOP_STACK_DEPTH
+    ret_sp = loop_sp = 0
+    pc = steps = 0
+    halted = False
+    out: list[TraceInstr] = []
+
+    def clip(i: int, depth: int) -> int:
+        return min(max(i, 0), depth - 1)
+
+    while not halted and steps < max_steps and 0 <= pc < imem_depth:
+        ins = decoded[pc] if pc < len(decoded) else stop
+        out.append(TraceInstr(
+            op=ins.op, klass=instr_class(ins.op, ins.typ),
+            cycles=instr_cycles(ins, n_threads),
+            gmem=ins.op in (Op.GLD, Op.GST)))
+        steps += 1
+        op = ins.op
+        # mirror device._device_step's h_ctl exactly (incl. index clipping)
+        if op == Op.JMP:
+            pc = ins.imm
+        elif op == Op.JSR:
+            ret_stack[clip(ret_sp, RET_STACK_DEPTH)] = pc + 1
+            ret_sp += 1
+            pc = ins.imm
+        elif op == Op.RTS:
+            pc = ret_stack[clip(ret_sp - 1, RET_STACK_DEPTH)]
+            ret_sp -= 1
+        elif op == Op.LOOP:
+            lsp = clip(loop_sp - 1, LOOP_STACK_DEPTH)
+            top = loop_ctr[lsp]
+            loop_ctr[lsp] = top - 1
+            if top > 1:
+                pc = ins.imm
+            else:
+                pc += 1
+                loop_sp -= 1
+        elif op == Op.INIT:
+            loop_ctr[clip(loop_sp, LOOP_STACK_DEPTH)] = ins.imm
+            loop_sp += 1
+            pc += 1
+        elif op == Op.STOP:
+            halted = True
+            pc += 1
+        else:
+            pc += 1
+    return ProgramTrace(instrs=tuple(out), halted=halted,
+                        n_threads=n_threads)
+
+
+@functools.lru_cache(maxsize=256)
+def _trace_cached(words: tuple[int, ...], n_threads: int, imem_depth: int,
+                  max_steps: int) -> ProgramTrace:
+    return _trace_walk(words, n_threads, imem_depth, max_steps)
+
+
+def program_trace(program, n_threads: int, *, imem_depth: int = 512,
+                  max_steps: int = 100_000) -> ProgramTrace:
+    """Statically trace one block's execution of ``program``.
+
+    ``program`` is an assembled ``Program`` or an array of encoded 40-bit
+    words. The walk reproduces the device sequencer (STOP-padded I-MEM,
+    clipped loop/return stacks, fuel limit), so ``trace.cycles`` equals the
+    cycles a 1-SM wave reports and ``trace.static_cycles(n)`` equals an
+    ``n``-block lockstep wave's — ``tests/test_scheduler.py`` pins both.
+    """
+    words = program.words if hasattr(program, "words") else program
+    key = tuple(int(w) for w in words)
+    return _trace_cached(key, int(n_threads), int(imem_depth),
+                         int(max_steps))

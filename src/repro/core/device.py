@@ -8,13 +8,22 @@ headline parameter. This module is that device abstraction:
   * ``DeviceConfig(n_sms, global_mem_depth, ...)`` wraps the single-SM
     ``SMConfig`` with the sector-level parameters;
   * ``launch(dcfg, program, grid=(n_blocks,), block=n_threads, ...)`` is a
-    CUDA-style launch: thread blocks are scheduled onto the ``n_sms`` SMs
-    in *waves* — blocks beyond ``n_sms`` queue and run in subsequent
-    rounds, with aggregate cycle accounting over the rounds;
+    CUDA-style launch; ``launch(dcfg, programs=[...], grid_map=[...])``
+    launches SEVERAL programs at once (e.g. FFT and QRD blocks mixed in
+    one grid), each block tagged with its program (``PID``) and its index
+    within that program's grid (``BID``);
+  * blocks are dispatched under one of two disciplines (``schedule=``):
+    **static** lockstep waves of ``n_sms`` blocks (the PR-1 model, exact
+    fast path for single-program launches), or **dynamic** work-queue
+    dispatch (``core.scheduler``) where every SM runs its own sequencer
+    and pulls the next ready block as soon as it retires its current one
+    — SMs no longer idle waiting for the slowest block of a wave;
   * every SM keeps its private shared memory, and all SMs reach one
-    **global-memory segment** (GLD/GST/BID in ``isa.py``) through a single
-    device-wide port — the serialization shows up in the cycle model
-    (``cycles.instr_cycles(..., n_sms=...)``).
+    **global-memory segment** (GLD/GST in ``isa.py``) through a single
+    device-wide port — under the static schedule the serialization shows
+    up as an inflated instruction cost
+    (``cycles.instr_cycles(..., n_sms=...)``), under the dynamic schedule
+    as per-SM port-wait time in ``LaunchResult.profile()``.
 
 Lockstep execution
 ------------------
@@ -28,6 +37,15 @@ wave is simulated as a single batched machine: ONE shared sequencer state
 stage run as one ``(n_sms, 512)`` batch through a pluggable backend
 (``executor.get_execute_backend``): the inline jnp path or the Pallas
 ``simt_alu`` kernel as a single grid over the SM batch.
+
+The same property makes each block's *timing* a static function of its
+program (``cycles.program_trace``), which is how dynamic scheduling stays
+exact: ``core.scheduler`` replays the per-block traces against per-SM
+sequencers and the single global port for timing, while architectural
+results are still computed by the lockstep batch machine per program in a
+canonical order (program-major, block order). Functional state is
+therefore invariant to the dispatch discipline; only the cycle accounting
+differs.
 
 Global-memory semantics (the packed-sector memory model):
 
@@ -43,14 +61,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import isa
+from .cycles import ProgramTrace, program_trace
 from .isa import NUM_CLASSES, Op
+from .scheduler import SCHEDULES, Schedule, schedule_blocks
 from .machine import (
     LOOP_STACK_DEPTH,
     MAX_THREADS,
@@ -103,12 +123,18 @@ class DeviceConfig:
     sm: SMConfig = SMConfig()         # per-SM template (block size is set
                                       # per launch; the rest is inherited)
     backend: str = "inline"           # default execute backend
+    schedule: str = "auto"            # default block-dispatch discipline:
+                                      # "static" waves | "dynamic" queue |
+                                      # "auto" (static iff one program)
 
     def __post_init__(self):
         if self.n_sms < 1:
             raise ValueError(f"n_sms={self.n_sms} must be >= 1")
         if self.global_mem_depth < 1:
             raise ValueError("global_mem_depth must be >= 1")
+        if self.schedule not in SCHEDULES + ("auto",):
+            raise ValueError(f"schedule={self.schedule!r} must be one of "
+                             f"{SCHEDULES + ('auto',)}")
 
 
 @jax.tree_util.register_dataclass
@@ -217,7 +243,7 @@ def _last_writer_write(mem, addr, vals, do, order):
 
 
 def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
-                 s: DeviceState) -> DeviceState:
+                 prog_idx, s: DeviceState) -> DeviceState:
     n_sms = s.regs.shape[0]
     d = _decode(imem_lo[s.pc], imem_hi[s.pc])
     tid = jnp.arange(MAX_THREADS, dtype=_I32)
@@ -313,8 +339,11 @@ def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
         y = (tid // cfg.dim_x).astype(_U32)[None]
         bid = jnp.broadcast_to(block_idx.astype(_U32)[:, None],
                                (n_sms, MAX_THREADS))
+        pid = jnp.broadcast_to(prog_idx.astype(_U32)[:, None],
+                               (n_sms, MAX_THREADS))
         vals = jnp.where(op == int(Op.TDX), x,
-                         jnp.where(op == int(Op.TDY), y, bid))
+                         jnp.where(op == int(Op.TDY), y,
+                                   jnp.where(op == int(Op.BID), bid, pid)))
         return s.replace(regs=write_active(s.regs, d["rd"], vals, active))
 
     def h_red(s):
@@ -406,7 +435,7 @@ def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def run_wave(cfg: SMConfig, backend: str, imem_lo, imem_hi, block_idx,
-             state: DeviceState) -> DeviceState:
+             prog_idx, state: DeviceState) -> DeviceState:
     """Run one wave of blocks to completion (jitted ``lax.while_loop``)."""
     execute = get_execute_backend(backend)
 
@@ -415,7 +444,8 @@ def run_wave(cfg: SMConfig, backend: str, imem_lo, imem_hi, block_idx,
             & (s.pc >= 0) & (s.pc < cfg.imem_depth)
 
     def body(s):
-        return _device_step(cfg, execute, imem_lo, imem_hi, block_idx, s)
+        return _device_step(cfg, execute, imem_lo, imem_hi, block_idx,
+                            prog_idx, s)
 
     return jax.lax.while_loop(cond, body, state)
 
@@ -457,24 +487,54 @@ def pack_buffers(buffers: Mapping[str, Any], depth: int
 # the launch API
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """One program of a (possibly multi-program) launch.
+
+    ``launch(..., programs=[...])`` accepts Kernels, assembled Programs, or
+    raw word arrays; a bare program gets the device defaults. ``block`` is
+    threads per block, ``dim_x`` the TDX/TDY x-extent (defaults to
+    ``block``: flat 1-D indexing), ``name`` labels the program in
+    ``LaunchResult.profile()``. ``barrier=True`` makes this program's
+    blocks wait until every block of all earlier-listed programs retired
+    (a device-wide dependency fence — the stream semantic for dependent
+    kernels such as the two stages of a grid reduction).
+    """
+
+    program: Any                      # Program | encoded 40-bit word array
+    block: int | None = None
+    dim_x: int | None = None
+    name: str | None = None
+    barrier: bool = False
+
+
+def as_kernel(p: Any) -> Kernel:
+    return p if isinstance(p, Kernel) else Kernel(program=p)
+
+
 @dataclasses.dataclass
 class LaunchResult:
     """Per-block results + aggregate device profile of one launch."""
 
     grid: tuple[int, ...]
-    block: int
-    n_waves: int
+    block: int | tuple[int, ...]  # threads/block (per program if mixed)
+    n_waves: int                # scheduling rounds (0 for dynamic dispatch)
     regs: jax.Array             # (n_blocks, MAX_THREADS, N_REGS) uint32
     shmem: jax.Array            # (n_blocks, shmem_depth) uint32
     gmem: jax.Array             # (global_mem_depth,) uint32 — final
     oob: jax.Array              # (n_blocks,) bool
-    halted: bool                # every wave ran to STOP
-    steps: int                  # instructions issued, summed over waves
-    cycles: int                 # aggregate device cycles (waves run back
-                                # to back on the one sector)
-    wave_cycles: np.ndarray     # (n_waves,) per-round cycle counts
-    cycles_by_class: np.ndarray  # (NUM_CLASSES,) summed over waves
+    halted: bool                # every block ran to STOP
+    steps: int                  # instructions issued (per sequencer)
+    cycles: int                 # modeled device cycles for the launch
+    wave_cycles: np.ndarray     # (n_waves,) per-round cycles (static only)
+    cycles_by_class: np.ndarray  # (NUM_CLASSES,) sequencer occupancy
     buffer_offsets: dict[str, tuple[int, int]] | None = None
+    # scheduling (None only for results built by legacy external code)
+    schedule: str = "static"            # "static" | "dynamic"
+    program_names: tuple[str, ...] = ("k0",)
+    grid_map: np.ndarray | None = None  # (n_blocks,) block -> program idx
+    timing: Schedule | None = None      # per-SM / per-block timeline
+    static_cycles: int | None = None    # wave-schedule baseline makespan
 
     @property
     def n_blocks(self) -> int:
@@ -497,60 +557,209 @@ class LaunchResult:
         return jax.lax.bitcast_convert_type(seg, dtype)
 
     def profile(self) -> dict[str, Any]:
-        """Aggregate cycle profile by instruction class (Tables III/IV view,
-        extended with the GMEM row)."""
+        """Aggregate cycle profile (Tables III/IV view + the GMEM row),
+        extended with the scheduler's per-SM / per-program occupancy view.
+
+        ``per_sm[i]``: busy (issuing), wait (stalled on the global port),
+        idle (no block to run) cycles and blocks retired for SM ``i``.
+        ``per_program[name]``: blocks, busy cycles, port-wait cycles, and
+        the per-SM busy split — the occupancy fractions are of the
+        launch's total modeled cycles. ``gmem_port`` summarizes the single
+        device-wide port: occupancy, queueing, and utilization.
+        """
         by = np.asarray(self.cycles_by_class)
         total = int(by.sum())
-        return {
-            "total_cycles": total,
+        out: dict[str, Any] = {
+            "total_cycles": int(self.cycles),
             "instructions": int(self.steps),
+            "schedule": self.schedule,
             "n_waves": self.n_waves,
             "wave_cycles": [int(c) for c in self.wave_cycles],
             "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
             "pct_by_class": {n: (100.0 * int(c) / total if total else 0.0)
                              for n, c in zip(isa.CLASS_NAMES, by)},
         }
+        t = self.timing
+        if t is None:
+            return out
+        span = max(int(self.cycles), 1)
+        busy, wait, idle = t.sm_busy, t.sm_wait, t.sm_idle
+        out["per_sm"] = [
+            {"busy": int(busy[i]), "wait": int(wait[i]),
+             "idle": int(idle[i]), "blocks": int(t.sm_blocks[i]),
+             "occupancy": int(busy[i]) / span}
+            for i in range(t.n_sms)]
+        gmap = np.asarray(self.grid_map)
+        per_prog: dict[str, Any] = {}
+        for k, name in enumerate(self.program_names):
+            mine = gmap == k
+            sm_busy_k = np.zeros(t.n_sms, np.int64)
+            np.add.at(sm_busy_k, t.block_sm[mine], t.block_busy[mine])
+            per_prog[name] = {
+                "blocks": int(mine.sum()),
+                "busy_cycles": int(t.block_busy[mine].sum()),
+                "gmem_wait": int(t.block_wait[mine].sum()),
+                "sm_busy": [int(c) for c in sm_busy_k],
+                "sm_occupancy": [int(c) / span for c in sm_busy_k],
+            }
+        out["per_program"] = per_prog
+        out["gmem_port"] = {
+            "busy": t.port_busy,
+            "wait": t.port_wait,
+            "utilization": t.port_busy / span,
+        }
+        out["static_cycles"] = int(self.static_cycles) \
+            if self.static_cycles is not None else int(self.cycles)
+        return out
 
 
-def launch(dcfg: DeviceConfig, program, grid, block: int | None = None, *,
+def _resolve_schedule(schedule: str | None, dcfg: DeviceConfig,
+                      n_programs: int) -> str:
+    mode = schedule if schedule is not None else dcfg.schedule
+    if mode == "auto":
+        return "static" if n_programs == 1 else "dynamic"
+    if mode not in SCHEDULES:
+        raise ValueError(f"schedule={mode!r} must be one of "
+                         f"{SCHEDULES + ('auto',)}")
+    return mode
+
+
+def _kernel_shmem(sh: Any, depth: int, count: int, k: int):
+    """Normalize one program's shared-memory init: None, one image
+    (broadcast to the program's blocks), or a (count, ...) batch indexed by
+    the program-local block index."""
+    if sh is None:
+        return None
+    batch = as_u32_image(sh, depth, f"shared-memory (program {k})")
+    if batch.ndim == 1:
+        return jnp.broadcast_to(batch, (count, depth))
+    if batch.shape[0] != count:
+        raise ValueError(f"shared-memory batch of {batch.shape[0]} images "
+                         f"!= {count} blocks of program {k}")
+    return batch
+
+
+def launch(dcfg: DeviceConfig, program=None, grid=None,
+           block: int | None = None, *,
+           programs: Sequence[Any] | None = None,
+           grid_map: Sequence[int] | None = None,
            buffers: Mapping[str, Any] | None = None,
            shmem: Any = None, gmem: Any = None,
-           backend: str | None = None, dim_x: int | None = None
-           ) -> LaunchResult:
+           backend: str | None = None, dim_x: int | None = None,
+           schedule: str | None = None) -> LaunchResult:
     """CUDA-style kernel launch on the multi-SM device.
+
+    Two forms:
+
+    * single-program: ``launch(dcfg, program, grid=(n_blocks,), block=n)``
+      — the PR-1 API, unchanged;
+    * multi-program: ``launch(dcfg, programs=[...], grid_map=[...])`` —
+      ``programs`` is a list of ``Kernel``s (or bare programs) and
+      ``grid_map[b]`` names the program block ``b`` runs. Blocks are
+      dispatched to the SM work queues in ``grid_map`` order; each block's
+      ``BID`` is its index *within its own program's grid* and ``PID`` its
+      program index, so concurrently-launched kernels address their own
+      data.
 
     Args:
       dcfg: the device (sector) configuration.
       program: an assembled ``Program`` or encoded 40-bit word array.
       grid: number of thread blocks, as ``(n_blocks,)`` or an int.
       block: threads per block (<= 512); defaults to ``dcfg.sm.n_threads``.
+      programs: the multi-program form (mutually exclusive with
+        ``program``/``grid``/``block``/``dim_x``).
+      grid_map: (n_blocks,) program index per block, in dispatch order.
       buffers: named host arrays packed into global memory from offset 0 in
         insertion order (layout via ``buffer_layout``); mutually exclusive
         with ``gmem``, a raw initial global-memory image.
-      shmem: per-SM shared-memory initializer — one image broadcast to all
-        blocks, or an ``(n_blocks, ...)`` batch of per-block images.
+      shmem: shared-memory initializer. Single-program: one image broadcast
+        to all blocks, or an ``(n_blocks, ...)`` batch. Multi-program: a
+        sequence aligned with ``programs`` whose entries are None, one
+        image, or an ``(n_blocks_of_program, ...)`` batch.
       backend: execute backend ("inline" | "pallas"); default from dcfg.
       dim_x: the 2-D thread-space x extent (TDX/TDY); defaults to ``block``
         (flat 1-D indexing, the CUDA idiom).
+      schedule: "static" (lockstep waves of ``n_sms`` blocks), "dynamic"
+        (per-SM sequencers pulling from the block work queue), or "auto"
+        (default: static when all blocks share one program — the exact
+        lockstep fast path — dynamic otherwise).
 
-    Blocks are scheduled in waves of ``dcfg.n_sms``: wave ``w`` runs blocks
-    ``[w*n_sms, (w+1)*n_sms)`` concurrently; the global-memory image carries
-    from wave to wave, and cycle counts aggregate across waves.
+    Timing comes from ``core.scheduler`` over the programs' static traces;
+    architectural results are computed by the exact lockstep batch machine
+    in a canonical, schedule-independent order (program-major, block
+    order), so buffers/registers/shared memory are invariant to the
+    dispatch discipline and to ``grid_map`` permutations of equal-program
+    blocks.
     """
-    grid = (int(grid),) if isinstance(grid, int) else tuple(map(int, grid))
-    if len(grid) != 1 or grid[0] < 1:
-        raise ValueError(f"grid={grid} must be a positive (n_blocks,)")
-    n_blocks = grid[0]
-    block = int(block) if block is not None else dcfg.sm.n_threads
-    cfg = dataclasses.replace(dcfg.sm, n_threads=block,
-                              dim_x=dim_x if dim_x is not None else block)
+    # ---- normalize to kernels + grid_map --------------------------------
+    if programs is not None:
+        if program is not None or grid is not None or block is not None \
+                or dim_x is not None:
+            raise ValueError("pass either program/grid/block/dim_x or "
+                             "programs=/grid_map=, not both")
+        if grid_map is None:
+            raise ValueError("programs= requires grid_map=")
+        kernels = [as_kernel(p) for p in programs]
+        gmap = np.asarray(list(grid_map), np.int64)
+        if gmap.ndim != 1 or gmap.shape[0] < 1:
+            raise ValueError("grid_map must be a non-empty 1-D sequence")
+        if gmap.min() < 0 or gmap.max() >= len(kernels):
+            raise ValueError(f"grid_map references programs outside "
+                             f"[0, {len(kernels)})")
+        shmems = list(shmem) if shmem is not None else [None] * len(kernels)
+        if len(shmems) != len(kernels):
+            raise ValueError(f"shmem sequence of {len(shmems)} != "
+                             f"{len(kernels)} programs")
+    else:
+        if program is None or grid is None:
+            raise ValueError("launch needs program+grid or programs+grid_map")
+        grid = (int(grid),) if isinstance(grid, int) \
+            else tuple(map(int, grid))
+        if len(grid) != 1 or grid[0] < 1:
+            raise ValueError(f"grid={grid} must be a positive (n_blocks,)")
+        kernels = [Kernel(program=program, block=block, dim_x=dim_x)]
+        gmap = np.zeros((grid[0],), np.int64)
+        shmems = [shmem]
+    n_blocks = int(gmap.shape[0])
     backend = backend or dcfg.backend
+    mode = _resolve_schedule(schedule, dcfg, len(kernels))
 
-    words = program.words if hasattr(program, "words") else np.asarray(program)
-    lo, hi = pack_imem(words, cfg.imem_depth)
-    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    # ---- per-program static resources -----------------------------------
+    names: list[str] = []
+    cfgs: list[SMConfig] = []
+    imems: list[tuple[jax.Array, jax.Array]] = []
+    traces: list[ProgramTrace] = []
+    for k, kern in enumerate(kernels):
+        blk = int(kern.block) if kern.block is not None \
+            else dcfg.sm.n_threads
+        cfg = dataclasses.replace(
+            dcfg.sm, n_threads=blk,
+            dim_x=kern.dim_x if kern.dim_x is not None else blk)
+        words = kern.program.words if hasattr(kern.program, "words") \
+            else np.asarray(kern.program)
+        lo, hi = pack_imem(words, cfg.imem_depth)
+        cfgs.append(cfg)
+        imems.append((jnp.asarray(lo), jnp.asarray(hi)))
+        traces.append(program_trace(words, blk, imem_depth=cfg.imem_depth,
+                                    max_steps=cfg.max_steps))
+        name = kern.name or f"k{k}"
+        while name in names:
+            name = f"{name}.{k}"
+        names.append(name)
 
-    # global-memory image
+    # ---- the schedule (timing) ------------------------------------------
+    phase_of_kernel = np.cumsum([int(k.barrier) for k in kernels])
+    block_phase = phase_of_kernel[gmap]
+    block_traces = [traces[k] for k in gmap]
+    timing = schedule_blocks(block_traces, dcfg.n_sms, mode,
+                             phase_of=block_phase)
+    if mode == "static":
+        static_span = timing.makespan
+    else:
+        static_span = schedule_blocks(block_traces, dcfg.n_sms, "static",
+                                      phase_of=block_phase).makespan
+
+    # ---- global-memory image --------------------------------------------
     offsets = None
     if buffers is not None:
         if gmem is not None:
@@ -561,47 +770,74 @@ def launch(dcfg: DeviceConfig, program, grid, block: int | None = None, *,
     else:
         gm = jnp.zeros((dcfg.global_mem_depth,), _U32)
 
-    # per-block shared-memory images
-    sh_batch = None
-    if shmem is not None:
-        sh_batch = as_u32_image(shmem, cfg.shmem_depth, "shared-memory")
-        if sh_batch.ndim == 1:
-            sh_batch = jnp.broadcast_to(sh_batch, (n_blocks, cfg.shmem_depth))
-        elif sh_batch.shape[0] != n_blocks:
-            raise ValueError(f"shared-memory batch of {sh_batch.shape[0]} "
-                             f"images != n_blocks={n_blocks}")
-
-    regs_parts, shmem_parts, oob_parts = [], [], []
+    # ---- functional execution (exact lockstep batches per program) ------
+    regs_slots: list[Any] = [None] * n_blocks
+    shmem_slots: list[Any] = [None] * n_blocks
+    oob_slots: list[Any] = [None] * n_blocks
     wave_cycles, wave_steps = [], []
-    by_class = np.zeros((NUM_CLASSES,), np.int64)
+    machine_by = np.zeros((NUM_CLASSES,), np.int64)
     halted = True
-    for w0 in range(0, n_blocks, dcfg.n_sms):
-        w1 = min(w0 + dcfg.n_sms, n_blocks)
-        n = w1 - w0
-        st = init_device_state(
-            cfg, n, gmem_depth=dcfg.global_mem_depth,
-            shmem=None if sh_batch is None else sh_batch[w0:w1], gmem=gm)
-        bidx = jnp.arange(w0, w1, dtype=_I32)
-        fin = run_wave(cfg, backend, lo, hi, bidx, st)
-        gm = fin.gmem                       # waves run back to back
-        regs_parts.append(fin.regs)
-        shmem_parts.append(fin.shmem)
-        oob_parts.append(fin.oob)
-        wave_cycles.append(int(fin.cycles))
-        wave_steps.append(int(fin.steps))
-        by_class += np.asarray(fin.cycles_by_class, np.int64)
-        halted = halted and bool(fin.halted)
+    for k, kern in enumerate(kernels):
+        pos = np.flatnonzero(gmap == k)
+        if pos.size == 0:
+            continue
+        cfg, (lo, hi) = cfgs[k], imems[k]
+        sh_batch = _kernel_shmem(shmems[k], cfg.shmem_depth, pos.size, k)
+        for w0 in range(0, pos.size, dcfg.n_sms):
+            w1 = min(w0 + dcfg.n_sms, pos.size)
+            n = w1 - w0
+            st = init_device_state(
+                cfg, n, gmem_depth=dcfg.global_mem_depth,
+                shmem=None if sh_batch is None else sh_batch[w0:w1],
+                gmem=gm)
+            bidx = jnp.arange(w0, w1, dtype=_I32)   # program-local BID
+            pidx = jnp.full((n,), k, dtype=_I32)
+            fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
+            gm = fin.gmem                   # batches run back to back
+            for i, b in enumerate(pos[w0:w1]):
+                regs_slots[b] = fin.regs[i]
+                shmem_slots[b] = fin.shmem[i]
+                oob_slots[b] = fin.oob[i]
+            wave_cycles.append(int(fin.cycles))
+            wave_steps.append(int(fin.steps))
+            machine_by += np.asarray(fin.cycles_by_class, np.int64)
+            halted = halted and bool(fin.halted)
+
+    # ---- aggregate counters ---------------------------------------------
+    if mode == "static" and len(kernels) == 1:
+        # the lockstep fast path: one program, shared sequencer per wave —
+        # report the batch machine's own counters (bit-identical to PR 1)
+        cycles = int(sum(wave_cycles))
+        steps = int(sum(wave_steps))
+        by_class = machine_by
+        waves_out = np.asarray(wave_cycles, np.int64)
+    else:
+        # per-SM sequencers: every block issues its own trace
+        cycles = timing.makespan
+        steps = sum(t.steps for t in block_traces)
+        by_class = np.zeros((NUM_CLASSES,), np.int64)
+        for t in block_traces:
+            by_class += np.asarray(t.cycles_by_class(), np.int64)
+        waves_out = timing.wave_cycles
 
     return LaunchResult(
-        grid=grid, block=block, n_waves=len(wave_cycles),
-        regs=jnp.concatenate(regs_parts, axis=0),
-        shmem=jnp.concatenate(shmem_parts, axis=0),
+        grid=(n_blocks,),
+        block=cfgs[0].n_threads if len(kernels) == 1
+        else tuple(c.n_threads for c in cfgs),
+        n_waves=len(waves_out),
+        regs=jnp.stack(regs_slots, axis=0),
+        shmem=jnp.stack(shmem_slots, axis=0),
         gmem=gm,
-        oob=jnp.concatenate(oob_parts, axis=0),
+        oob=jnp.stack(oob_slots, axis=0),
         halted=halted,
-        steps=int(sum(wave_steps)),
-        cycles=int(sum(wave_cycles)),
-        wave_cycles=np.asarray(wave_cycles, np.int64),
+        steps=steps,
+        cycles=cycles,
+        wave_cycles=np.asarray(waves_out, np.int64),
         cycles_by_class=by_class.astype(np.int64),
         buffer_offsets=offsets,
+        schedule=mode,
+        program_names=tuple(names),
+        grid_map=gmap,
+        timing=timing,
+        static_cycles=static_span,
     )

@@ -107,7 +107,7 @@ for _op, _g in {
     Op.OR: _G_ALU, Op.XOR: _G_ALU, Op.NOT: _G_ALU, Op.LSL: _G_ALU,
     Op.LSR: _G_ALU,
     Op.LOD: _G_LOD, Op.STO: _G_STO, Op.LODI: _G_LODI,
-    Op.TDX: _G_TD, Op.TDY: _G_TD, Op.BID: _G_TD,
+    Op.TDX: _G_TD, Op.TDY: _G_TD, Op.BID: _G_TD, Op.PID: _G_TD,
     Op.DOT: _G_RED, Op.SUM: _G_RED, Op.INVSQR: _G_SFU,
     Op.JMP: _G_CTL, Op.JSR: _G_CTL, Op.RTS: _G_CTL, Op.LOOP: _G_CTL,
     Op.INIT: _G_CTL, Op.STOP: _G_CTL,
@@ -203,7 +203,8 @@ def run(cfg: SMConfig, program, shmem: np.ndarray | None = None,
     else:
         dstate = device.lift_machine_state(state)
     fin = device.run_wave(cfg, backend, jnp.asarray(lo), jnp.asarray(hi),
-                          jnp.zeros((1,), _I32), dstate)
+                          jnp.zeros((1,), _I32), jnp.zeros((1,), _I32),
+                          dstate)
     return device.squeeze_device_state(fin)
 
 
@@ -225,7 +226,8 @@ def run_many(cfg: SMConfig, program, shmem_batch: np.ndarray, *,
     lo, hi = pack_imem(words, cfg.imem_depth)
     dstate = device.init_device_state(cfg, n_sms=n_sms, shmem=shmem_batch)
     fin = device.run_wave(cfg, backend, jnp.asarray(lo), jnp.asarray(hi),
-                          jnp.arange(n_sms, dtype=_I32), dstate)
+                          jnp.arange(n_sms, dtype=_I32),
+                          jnp.zeros((n_sms,), _I32), dstate)
     # historical layout: every field vmapped over the SM batch
     b = lambda x: jnp.broadcast_to(x, (n_sms,) + x.shape)
     return MachineState(

@@ -80,7 +80,8 @@ class Op(enum.IntEnum):
     # Multi-SM device extension (not in the single-SM paper ISA)
     GLD = 24   # GLD Rd (Ra)+offset — global-memory load (shared across SMs)
     GST = 25   # GST Rd (Ra)+offset — global-memory store
-    BID = 26   # BID Rd — thread-block index within the launch grid
+    BID = 26   # BID Rd — thread-block index within the program's grid
+    PID = 27   # PID Rd — program index within a multi-program launch
 
 
 class Typ(enum.IntEnum):
@@ -225,7 +226,7 @@ def instr_class(op: Op, typ: Typ) -> int:
         if typ == Typ.FP32:
             return 6 if op == Op.MUL else 5
         return 3
-    if op in (Op.TDX, Op.TDY, Op.BID):
+    if op in (Op.TDX, Op.TDY, Op.BID, Op.PID):
         return 3
     if op == Op.LOD:
         return 4

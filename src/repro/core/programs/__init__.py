@@ -1,12 +1,20 @@
-"""eGPU assembly programs: the paper's benchmarks + extras."""
-from .fft import bitrev_indices, fft_asm, fft_shmem, run_fft
-from .qrd import qrd_asm, qrd_shmem, run_qrd
-from .reduction import reduction_asm, run_reduction
-from .saxpy import run_saxpy, saxpy_asm
+"""eGPU assembly programs: the paper's benchmarks + extras.
+
+Each module also exposes a ``*_kernel`` helper packaging the program as a
+``device.Kernel`` for multi-program launches; ``mixed.launch_fft_qrd`` is
+the canonical heterogeneous demo and ``reduction.launch_reduction``'s
+``fused=True`` form shows dependent kernels (barrier) in one launch.
+"""
+from .fft import bitrev_indices, fft_asm, fft_kernel, fft_shmem, run_fft
+from .mixed import launch_fft_qrd, mixed_device
+from .qrd import qrd_asm, qrd_kernel, qrd_shmem, run_qrd
+from .reduction import launch_reduction, reduction_asm, run_reduction
+from .saxpy import launch_saxpy, run_saxpy, saxpy_asm, saxpy_kernel
 
 __all__ = [
-    "bitrev_indices", "fft_asm", "fft_shmem", "run_fft",
-    "qrd_asm", "qrd_shmem", "run_qrd",
-    "reduction_asm", "run_reduction",
-    "saxpy_asm", "run_saxpy",
+    "bitrev_indices", "fft_asm", "fft_kernel", "fft_shmem", "run_fft",
+    "launch_fft_qrd", "mixed_device",
+    "qrd_asm", "qrd_kernel", "qrd_shmem", "run_qrd",
+    "launch_reduction", "reduction_asm", "run_reduction",
+    "launch_saxpy", "saxpy_asm", "saxpy_kernel", "run_saxpy",
 ]

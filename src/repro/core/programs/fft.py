@@ -28,7 +28,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble
-from ..device import DeviceConfig, LaunchResult, launch
+from ..device import DeviceConfig, Kernel, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -140,6 +140,13 @@ def fft_program(n: int, unroll: bool = False, pad_hazards: bool = True) -> Progr
     return assemble(fft_asm(n, unroll, pad_hazards))
 
 
+def fft_kernel(n: int, unroll: bool = False) -> Kernel:
+    """n-point FFT as a ``Kernel`` (block of n/2 butterfly threads) for
+    multi-program launches; pair with per-block ``fft_shmem`` images."""
+    return Kernel(program=fft_program(n, unroll), block=n // 2,
+                  name=f"fft{n}")
+
+
 def bitrev_indices(n: int) -> np.ndarray:
     bits = n.bit_length() - 1
     idx = np.arange(n)
@@ -178,7 +185,8 @@ def run_fft(x: np.ndarray, unroll: bool = False, pad_hazards: bool = True):
 
 
 def run_fft_batch(xs: np.ndarray, device: DeviceConfig | None = None,
-                  unroll: bool = False, backend: str | None = None
+                  unroll: bool = False, backend: str | None = None,
+                  schedule: str | None = None
                   ) -> tuple[np.ndarray, LaunchResult]:
     """Batched FFT on the device layer: one n-point FFT per thread block.
 
@@ -197,7 +205,7 @@ def run_fft_batch(xs: np.ndarray, device: DeviceConfig | None = None,
     images = np.stack([fft_shmem(xs[b], device.sm.shmem_depth)
                        for b in range(batch)])
     res = launch(device, prog, grid=(batch,), block=n_threads,
-                 shmem=images, backend=backend)
+                 shmem=images, backend=backend, schedule=schedule)
     mem = np.asarray(res.shmem_f32())
     out_br = mem[:, 0:2 * n:2] + 1j * mem[:, 1:2 * n:2]
     out = np.empty((batch, n), dtype=np.complex64)

@@ -53,7 +53,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble, auto_nop
-from ..device import DeviceConfig, LaunchResult, launch
+from ..device import DeviceConfig, Kernel, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -152,6 +152,17 @@ def qrd_program(loop: bool = False, **kw) -> Program:
     return assemble(qrd_asm_loop(**kw) if loop else qrd_asm(**kw))
 
 
+def qrd_kernel(loop: bool = False) -> Kernel:
+    """16x16 MGS QRD as a ``Kernel`` (256 threads, 16x16 thread space) for
+    multi-program launches; pair with per-block ``qrd_shmem`` images.
+
+    Note the unrolled variant needs ``SMConfig(imem_depth=1024)`` on the
+    device; the ``loop=True`` variant fits the default 512-word I-MEM.
+    """
+    return Kernel(program=qrd_program(loop), block=256, dim_x=16,
+                  name="qrd16")
+
+
 def qrd_shmem(a: np.ndarray, depth: int = 1024) -> np.ndarray:
     if a.shape != (16, 16):
         raise ValueError("the paper's benchmark is a 16x16 matrix")
@@ -173,6 +184,7 @@ def run_qrd(a: np.ndarray, loop: bool = False, **kw):
 
 def run_qrd_batch(As: np.ndarray, device: DeviceConfig | None = None,
                   loop: bool = False, backend: str | None = None,
+                  schedule: str | None = None,
                   **kw) -> tuple[np.ndarray, np.ndarray, LaunchResult]:
     """Batched 16x16 MGS QRD on the device layer: one matrix per block.
 
@@ -188,7 +200,8 @@ def run_qrd_batch(As: np.ndarray, device: DeviceConfig | None = None,
     images = np.stack([qrd_shmem(As[b], device.sm.shmem_depth)
                        for b in range(batch)])
     res = launch(device, qrd_program(loop, **kw), grid=(batch,), block=256,
-                 shmem=images, dim_x=16, backend=backend)
+                 shmem=images, dim_x=16, backend=backend,
+                 schedule=schedule)
     mem = np.asarray(res.shmem_f32())
     q = mem[:, Q_BASE:Q_BASE + 256].reshape(batch, 16, 16).transpose(0, 2, 1)
     r = mem[:, R_BASE:R_BASE + 256].reshape(batch, 16, 16)

@@ -16,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble, auto_nop
-from ..device import DeviceConfig, LaunchResult, launch
+from ..device import DeviceConfig, Kernel, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -112,15 +112,25 @@ def reduction_grid_asm(n_threads: int, src_base: int, dst_base: int,
 
 
 def launch_reduction(x: np.ndarray, device: DeviceConfig | None = None,
-                     block: int = 512, backend: str | None = None
+                     block: int = 512, backend: str | None = None,
+                     schedule: str | None = None, fused: bool = False
                      ) -> tuple[float, LaunchResult]:
     """Two-level grid reduction of x on the multi-SM device.
 
     Any length up to ~16K elements (every global-memory offset is a GLD/GST
     immediate, so the padded x + partials + result layout must fit the
-    signed 14-bit immediate range). Returns (total, stage-2 LaunchResult).
-    Stage 1 writes one partial per block; stage 2 is a one-block launch
-    over the carried-forward global memory that folds the partials.
+    signed 14-bit immediate range). Returns (total, LaunchResult).
+
+    ``fused=False``: two back-to-back launches — stage 1 writes one
+    partial per block, stage 2 is a one-block launch over the
+    carried-forward global memory that folds the partials. The result is
+    the stage-2 LaunchResult.
+
+    ``fused=True``: ONE multi-program launch — the stage-2 program rides
+    in the same grid with ``barrier=True``, so its block dispatches only
+    after every stage-1 block retired (the scheduler's dependency fence).
+    The result is the whole launch's LaunchResult, so ``profile()`` shows
+    both stages' per-SM occupancy.
     """
     x = np.asarray(x, np.float32).reshape(-1)
     n = x.shape[0]
@@ -147,11 +157,22 @@ def launch_reduction(x: np.ndarray, device: DeviceConfig | None = None,
         depth = layout["result"][0] + layout["result"][1]
         device = DeviceConfig(global_mem_depth=max(depth, 64),
                               sm=SMConfig(max_steps=50_000))
-    s1 = launch(device, assemble(reduction_grid_asm(block, src, par, True)),
-                grid=(n_blocks,), block=block, buffers=buffers,
-                backend=backend)
-    s2 = launch(device, assemble(reduction_grid_asm(n2, par, res_off, False)),
-                grid=(1,), block=n2, gmem=s1.gmem, backend=backend)
+    stage1 = assemble(reduction_grid_asm(block, src, par, True))
+    stage2 = assemble(reduction_grid_asm(n2, par, res_off, False))
+    if fused:
+        res = launch(
+            device,
+            programs=[Kernel(stage1, block=block, name="reduce.stage1"),
+                      Kernel(stage2, block=n2, name="reduce.stage2",
+                             barrier=True)],
+            grid_map=[0] * n_blocks + [1], buffers=buffers,
+            backend=backend, schedule=schedule)
+        total = float(np.asarray(res.buffer("result"))[0])
+        return total, res
+    s1 = launch(device, stage1, grid=(n_blocks,), block=block,
+                buffers=buffers, backend=backend, schedule=schedule)
+    s2 = launch(device, stage2, grid=(1,), block=n2, gmem=s1.gmem,
+                backend=backend, schedule=schedule)
     s2.buffer_offsets = layout  # stage 2 inherits the stage-1 layout
     total = float(np.asarray(s2.buffer("result"))[0])
     return total, s2

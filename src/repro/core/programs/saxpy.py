@@ -17,7 +17,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..assembler import Program, assemble, auto_nop
-from ..device import DeviceConfig, LaunchResult, launch
+from ..device import DeviceConfig, Kernel, LaunchResult, launch
 from ..executor import run
 from ..machine import SMConfig, shmem_f32
 
@@ -106,9 +106,17 @@ def saxpy_grid_program(n: int, block: int) -> Program:
     return assemble(saxpy_grid_asm(n, block))
 
 
+def saxpy_kernel(n: int, block: int = 512) -> Kernel:
+    """Grid SAXPY as a ``Kernel`` for multi-program launches."""
+    block = min(block, n)
+    return Kernel(program=saxpy_grid_program(n, block), block=block,
+                  name=f"saxpy{n}")
+
+
 def launch_saxpy(alpha: float, x: np.ndarray, y: np.ndarray,
                  device: DeviceConfig | None = None,
-                 block: int = 512, backend: str | None = None
+                 block: int = 512, backend: str | None = None,
+                 schedule: str | None = None
                  ) -> tuple[np.ndarray, LaunchResult]:
     """z = alpha*x + y over a launch grid; any n that is a multiple of 16.
 
@@ -133,6 +141,6 @@ def launch_saxpy(alpha: float, x: np.ndarray, y: np.ndarray,
     }
     res = launch(device, saxpy_grid_program(n, block),
                  grid=(n // block,), block=block, buffers=buffers,
-                 backend=backend)
+                 backend=backend, schedule=schedule)
     z = np.asarray(res.buffer("z")).copy()
     return z, res

@@ -32,6 +32,16 @@ def _mgs_kernel(a_ref, q_ref, r_ref):
         res, q, r = carry
         onehot = eye[j]                                     # (n,)
         aj = jnp.sum(res * onehot[None, None, :], axis=2)   # (B, n) column j
+        # re-orthogonalization ("twice is enough"): one extra projection of
+        # the residual against the already-computed Q columns (cols >= j
+        # are still zero) removes the O(kappa^2 eps) orthogonality loss of
+        # plain f32 MGS; the coefficients fold into R column j so A = QR
+        # is preserved exactly
+        coeff = jnp.sum(q * aj[:, :, None], axis=1)         # (B, n) <q_i,aj>
+        corr = jnp.sum(q * coeff[:, None, :], axis=2)       # (B, n) Q coeff
+        aj = aj - corr
+        res = res - corr[:, :, None] * onehot[None, None, :]
+        r = r + coeff[:, :, None] * onehot[None, None, :]
         nrm2 = jnp.sum(aj * aj, axis=1, keepdims=True)
         recip = jax.lax.rsqrt(nrm2)                         # the SFU
         qj = aj * recip

@@ -68,6 +68,14 @@ def mgs_qrd_ref(a: jax.Array) -> tuple[jax.Array, jax.Array]:
     Column version, exactly the eGPU benchmark's math: q_j = a_j/||a_j||
     (via rsqrt, the SFU), r_jk = <q_j, a_k>, a_k -= r_jk q_j. Branch-free:
     already-finished columns have zero residuals.
+
+    The projections contract with an explicit lanewise multiply-then-sum
+    (NOT ``einsum``/``dot_general``): that is what the eGPU dot-product
+    unit does, and it keeps the oracle's f32 accumulation order identical
+    to the ``mgs_qrd`` Pallas kernel's — in interpret mode the two are
+    bitwise equal, so kernel-vs-ref sweeps can assert tight tolerances
+    on any input (a dot_general here drifted up to ~1e-3 on
+    ill-conditioned draws purely from summation order).
     """
     B, n, _ = a.shape
     q = jnp.zeros_like(a)
@@ -78,9 +86,17 @@ def mgs_qrd_ref(a: jax.Array) -> tuple[jax.Array, jax.Array]:
         res, q, r = carry
         onehot = eye[j]                                     # (n,)
         aj = jnp.sum(res * onehot[None, None, :], axis=2)   # (B, n)
+        # "twice is enough" re-orthogonalization, mirrored in the kernel:
+        # project the residual once more against the computed Q columns
+        # and fold the coefficients into R column j
+        coeff = jnp.sum(q * aj[:, :, None], axis=1)
+        corr = jnp.sum(q * coeff[:, None, :], axis=2)
+        aj = aj - corr
+        res = res - corr[:, :, None] * onehot[None, None, :]
+        r = r + coeff[:, :, None] * onehot[None, None, :]
         recip = jax.lax.rsqrt(jnp.sum(aj * aj, axis=1, keepdims=True))
         qj = aj * recip                                     # (B, n)
-        rrow = jnp.einsum("bi,bik->bk", qj, res)            # (B, n)
+        rrow = jnp.sum(qj[:, :, None] * res, axis=1)        # (B, n)
         res = res - qj[:, :, None] * rrow[:, None, :]
         q = q + qj[:, :, None] * onehot[None, None, :]
         r = r + rrow[:, None, :] * onehot[None, :, None]

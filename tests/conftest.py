@@ -25,6 +25,13 @@ _SRC = Path(__file__).resolve().parent.parent / "src"
 if _SRC.is_dir() and str(_SRC) not in sys.path:
     sys.path.insert(0, str(_SRC))
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "scheduler: block-scheduler + golden cycle-model regression tests "
+        "(CI runs them standalone via `pytest -m scheduler`)")
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:

@@ -248,6 +248,77 @@ def test_acceptance_two_waves_bit_identical():
 
 
 # ---------------------------------------------------------------------------
+# multi-program launches + the dynamic scheduler acceptance case
+# ---------------------------------------------------------------------------
+
+def test_pid_op_reports_program_index():
+    from repro.core import Kernel
+
+    prog = assemble("PID R1\nBID R2\nSTO R1, (R0)+0 {w1,d1}\n"
+                    "STO R2, (R0)+1 {w1,d1}\nSTOP").words
+    res = launch(_dcfg(n_sms=2),
+                 programs=[Kernel(prog, block=16, name="a"),
+                           Kernel(prog, block=16, name="b")],
+                 grid_map=[0, 1, 1, 0, 1])
+    sh = np.asarray(res.shmem)[:, :2]
+    np.testing.assert_array_equal(sh[:, 0], [0, 1, 1, 0, 1])   # PID
+    np.testing.assert_array_equal(sh[:, 1], [0, 0, 1, 1, 2])   # local BID
+
+
+def test_acceptance_mixed_fft_qrd_4sm():
+    """The PR acceptance case: a mixed FFT+QRD launch on a 4-SM device —
+    correct numerics, non-zero per-SM occupancy for both programs, and
+    dynamic dispatch never slower than the static wave schedule."""
+    from repro.core.programs import launch_fft_qrd
+
+    rng = np.random.default_rng(0)
+    xs = (rng.standard_normal((12, 64))
+          + 1j * rng.standard_normal((12, 64))).astype(np.complex64)
+    As = rng.standard_normal((6, 16, 16)).astype(np.float32)
+    X, Q, R, res = launch_fft_qrd(xs, As)
+
+    assert res.schedule == "dynamic" and res.halted
+    np.testing.assert_allclose(X, np.fft.fft(xs, axis=1), atol=1e-4)
+    np.testing.assert_allclose(np.einsum("bij,bjk->bik", Q, R), As,
+                               atol=1e-4)
+    for i in range(6):
+        np.testing.assert_allclose(Q[i].T @ Q[i], np.eye(16), atol=1e-4)
+
+    p = res.profile()
+    assert set(p["per_program"]) == {"fft64", "qrd16"}
+    for name, d in p["per_program"].items():
+        assert d["blocks"] > 0
+        assert all(o > 0 for o in d["sm_occupancy"]), \
+            f"{name} idle on some SM: {d['sm_occupancy']}"
+    # the imbalanced grid: work-queue dispatch beats lockstep waves
+    assert res.cycles <= res.static_cycles
+    assert p["static_cycles"] == res.static_cycles
+    # total busy is conserved across SMs and programs
+    assert sum(d["busy_cycles"] for d in p["per_program"].values()) \
+        == sum(d["busy"] for d in p["per_sm"])
+
+
+def test_mixed_launch_static_vs_dynamic_same_results():
+    from repro.core.programs import launch_fft_qrd, mixed_device
+
+    rng = np.random.default_rng(1)
+    xs = (rng.standard_normal((5, 32))
+          + 1j * rng.standard_normal((5, 32))).astype(np.complex64)
+    As = rng.standard_normal((3, 16, 16)).astype(np.float32)
+    outs = {}
+    for schedule in ("static", "dynamic"):
+        X, Q, R, res = launch_fft_qrd(xs, As, schedule=schedule)
+        outs[schedule] = (X, Q, R, res)
+    Xs, Qs, Rs, rs = outs["static"]
+    Xd, Qd, Rd, rd = outs["dynamic"]
+    np.testing.assert_array_equal(Xs, Xd)
+    np.testing.assert_array_equal(Qs, Qd)
+    np.testing.assert_array_equal(Rs, Rd)
+    assert rd.cycles <= rs.cycles == rd.static_cycles
+    assert rs.n_waves == len(rs.wave_cycles) > 0 and rd.n_waves == 0
+
+
+# ---------------------------------------------------------------------------
 # backward compatibility
 # ---------------------------------------------------------------------------
 

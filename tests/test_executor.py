@@ -15,6 +15,7 @@ from repro.core import (
     shmem_f32,
     shmem_i32,
 )
+from repro.core.assembler import auto_nop
 
 
 def _run(asm, n_threads=16, shmem=None, dim_x=None, depth=64, **kw):
@@ -306,6 +307,107 @@ def test_stop_halts_and_fuel_limits():
 def test_runaway_pc_halts_on_stop_padding():
     _, st = _run("NOP")  # falls through into STOP-padded I-MEM
     assert bool(st.halted)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous launches: inline vs pallas differential sweep
+# ---------------------------------------------------------------------------
+
+_HET_ALU = ["ADD", "SUB", "MUL", "AND", "OR", "XOR", "LSL", "LSR"]
+
+
+def _random_het_program(rng, gdepth=64):
+    """Random straightline program touching every multi-program feature:
+    PID/BID addressing, shared + global memory, random-typed ALU traffic."""
+    lines = ["    PID R1", "    BID R2", "    TDX R3"]
+    for _ in range(int(rng.integers(4, 10))):
+        kind = int(rng.integers(0, 4))
+        if kind == 0:
+            op = _HET_ALU[int(rng.integers(0, len(_HET_ALU)))]
+            typ = ["", ".INT32", ".UINT32", ".FP32"][int(rng.integers(0, 4))]
+            rd, ra, rb = (int(rng.integers(1, 16)) for _ in range(3))
+            lines.append(f"    {op}{typ} R{rd}, R{ra}, R{rb}")
+        elif kind == 1:
+            lines.append(f"    LOD R{int(rng.integers(1, 16))}, "
+                         f"#{int(rng.integers(-50, 50))}")
+        elif kind == 2:
+            lines.append(f"    GLD R{int(rng.integers(1, 16))}, "
+                         f"(R0)+{int(rng.integers(0, gdepth))}")
+        else:
+            lines.append(f"    LOD R{int(rng.integers(1, 16))}, "
+                         f"(R3)+{int(rng.integers(0, 16))}")
+    lines.append(f"    STO R{int(rng.integers(1, 16))}, (R3)+16")
+    lines.append(f"    GST R{int(rng.integers(1, 16))}, (R2)+32 {{w1,d1}}")
+    lines.append("    STOP")
+    return assemble("\n".join(lines))
+
+
+@pytest.mark.parametrize("schedule", ["static", "dynamic"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_heterogeneous_launch_inline_pallas_bit_exact(seed, schedule):
+    """The backend seam must stay bit-exact on the multi-program paths:
+    per-program lockstep batches with mixed block sizes, PID plumbing,
+    carried global memory."""
+    from repro.core import DeviceConfig, Kernel, launch
+
+    rng = np.random.default_rng(seed)
+    kernels = [Kernel(_random_het_program(rng), block=16, name="a"),
+               Kernel(_random_het_program(rng), block=32, name="b"),
+               Kernel(_random_het_program(rng), block=16, name="c",
+                      barrier=bool(seed % 2))]
+    gmap = [int(g) for g in rng.integers(0, 3, 8)]
+    gmem = rng.standard_normal(64).astype(np.float32)
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=64,
+                        sm=SMConfig(shmem_depth=64, max_steps=500))
+    outs = {}
+    for backend in ("inline", "pallas"):
+        outs[backend] = launch(dcfg, programs=kernels, grid_map=gmap,
+                               gmem=gmem, backend=backend,
+                               schedule=schedule)
+    a, b = outs["inline"], outs["pallas"]
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+    np.testing.assert_array_equal(np.asarray(a.shmem), np.asarray(b.shmem))
+    np.testing.assert_array_equal(np.asarray(a.gmem), np.asarray(b.gmem))
+    assert a.cycles == b.cycles and a.steps == b.steps
+    assert a.schedule == b.schedule == schedule
+    assert a.static_cycles == b.static_cycles
+
+
+def test_heterogeneous_two_stage_pipeline_through_gmem():
+    """Program-major functional order: a consumer program in the same
+    launch (barrier) reads what the producer wrote to global memory, on
+    both backends."""
+    from repro.core import DeviceConfig, Kernel, launch
+
+    producer = assemble(auto_nop("""
+        BID R1
+        TDX R2
+        ADD.INT32 R3, R1, R2
+        GST R3, (R2)+0
+        STOP
+    """, 16))
+    consumer = assemble(auto_nop("""
+        TDX R2
+        GLD R4, (R2)+0
+        ADD.INT32 R5, R4, R4
+        GST R5, (R2)+16
+        STOP
+    """, 16))
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=64,
+                        sm=SMConfig(shmem_depth=64, max_steps=500))
+    for backend in ("inline", "pallas"):
+        res = launch(dcfg,
+                     programs=[Kernel(producer, block=16, name="produce"),
+                               Kernel(consumer, block=16, name="consume",
+                                      barrier=True)],
+                     grid_map=[0, 0, 1], backend=backend)
+        g = np.asarray(res.gmem).astype(np.int64)
+        # last producer block (bid=1) wins the write: gmem[t] = 1 + t
+        np.testing.assert_array_equal(g[:16], 1 + np.arange(16))
+        np.testing.assert_array_equal(g[16:32], 2 * (1 + np.arange(16)))
+        # the consumer's block never starts before both producers retire
+        assert int(res.timing.block_start[2]) \
+            >= int(res.timing.block_finish[:2].max())
 
 
 # ---------------------------------------------------------------------------

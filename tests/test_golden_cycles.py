@@ -1,0 +1,127 @@
+"""Golden cycle-count regression suite.
+
+Every case records the exact modeled cycle/instruction counts of a
+representative launch into ``tests/golden_cycles.json``. The eGPU ISA has
+no data-dependent control flow, so these numbers are a pure function of
+the cost model + scheduler — any change to either becomes a visible diff
+here instead of silently shifting the paper-table reproductions.
+
+Regenerate after an INTENTIONAL cost-model change with:
+
+    PYTHONPATH=src python tests/test_golden_cycles.py --update
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceConfig, SMConfig
+
+pytestmark = pytest.mark.scheduler
+
+GOLDEN_PATH = Path(__file__).parent / "golden_cycles.json"
+
+
+def _record(res):
+    out = {"schedule": res.schedule, "cycles": int(res.cycles),
+           "steps": int(res.steps),
+           "static_cycles": int(res.static_cycles),
+           "gmem": int(res.cycles_by_class[-1])}
+    if res.n_waves:
+        out["wave_cycles"] = [int(c) for c in res.wave_cycles]
+    return out
+
+
+def _saxpy(n_sms):
+    from repro.core.programs import launch_saxpy
+
+    x = np.arange(256, dtype=np.float32)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=1024,
+                       sm=SMConfig(max_steps=10_000))
+    _, res = launch_saxpy(2.0, x, np.ones_like(x), device=dev, block=64)
+    return res
+
+
+def _reduction_fused(n_sms):
+    from repro.core.programs import launch_reduction
+
+    x = np.ones(1024, np.float32)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=2048,
+                       sm=SMConfig(max_steps=50_000))
+    _, res = launch_reduction(x, device=dev, block=256, fused=True)
+    return res
+
+
+def _fft_batch(n_sms):
+    from repro.core.programs.fft import run_fft_batch
+
+    xs = np.ones((5, 64), np.complex64)
+    dev = DeviceConfig(n_sms=n_sms,
+                       sm=SMConfig(shmem_depth=192, max_steps=200_000))
+    _, res = run_fft_batch(xs, device=dev)
+    return res
+
+
+def _qrd_batch(n_sms):
+    from repro.core.programs.qrd import run_qrd_batch
+
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * i
+                   for i in range(5)])
+    dev = DeviceConfig(n_sms=n_sms,
+                       sm=SMConfig(shmem_depth=1024, imem_depth=1024,
+                                   max_steps=200_000))
+    _, _, res = run_qrd_batch(As, device=dev)
+    return res
+
+
+def _mixed(schedule):
+    from repro.core.programs import launch_fft_qrd
+
+    xs = np.ones((6, 64), np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32)] * 3)
+    _, _, _, res = launch_fft_qrd(xs, As, schedule=schedule)
+    return res
+
+
+CASES = {}
+for _n in (1, 2, 4):
+    CASES[f"saxpy256_b64[{_n}sm]"] = (lambda n=_n: _saxpy(n))
+    CASES[f"reduction1024_fused[{_n}sm]"] = (lambda n=_n: _reduction_fused(n))
+    CASES[f"fft64_batch5[{_n}sm]"] = (lambda n=_n: _fft_batch(n))
+    CASES[f"qrd16_batch5[{_n}sm]"] = (lambda n=_n: _qrd_batch(n))
+CASES["mixed_fft_qrd[4sm,dynamic]"] = lambda: _mixed("dynamic")
+CASES["mixed_fft_qrd[4sm,static]"] = lambda: _mixed("static")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not GOLDEN_PATH.exists():
+        pytest.fail(f"{GOLDEN_PATH} missing — regenerate with "
+                    f"`python tests/test_golden_cycles.py --update`")
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_cycles(name, golden):
+    assert name in golden, (f"no golden entry for {name!r} — regenerate "
+                            f"with --update")
+    got = _record(CASES[name]())
+    assert got == golden[name], (
+        f"cycle model drift on {name}: {got} != {golden[name]} — if the "
+        f"change is intentional, regenerate golden_cycles.json")
+
+
+def _update():
+    data = {name: _record(fn()) for name, fn in sorted(CASES.items())}
+    GOLDEN_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {len(data)} cases to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--update" in sys.argv[1:]:
+        _update()
+    else:
+        print(__doc__)

@@ -1,0 +1,294 @@
+"""Dynamic block scheduler tests: trace fidelity, per-SM sequencers, the
+work-queue vs lockstep-wave disciplines, and the scheduler invariants.
+
+Marked ``scheduler`` (with the golden cycle tests) so CI can run the
+cycle-model regression set on its own: ``pytest -m scheduler``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DeviceConfig,
+    Kernel,
+    SMConfig,
+    assemble,
+    launch,
+    program_trace,
+    schedule_blocks,
+)
+from repro.core.assembler import auto_nop
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+
+pytestmark = pytest.mark.scheduler
+
+RNG = np.random.default_rng(11)
+
+
+def _dcfg(n_sms=4, gdepth=256, **sm_kw):
+    sm_kw.setdefault("max_steps", 5000)
+    return DeviceConfig(n_sms=n_sms, global_mem_depth=gdepth,
+                        sm=SMConfig(**sm_kw))
+
+
+# ---------------------------------------------------------------------------
+# trace fidelity: the host-side sequencer walk == the traced device machine
+# ---------------------------------------------------------------------------
+
+def _programs_under_test():
+    from repro.core.programs.fft import fft_program
+    from repro.core.programs.qrd import qrd_asm_loop
+    from repro.core.programs.reduction import reduction_grid_asm
+    from repro.core.programs.saxpy import saxpy_grid_program
+
+    return [
+        ("saxpy", saxpy_grid_program(64, 16), 16, 16),
+        ("fft64-loop", fft_program(64), 32, 32),
+        ("fft32-unrolled", fft_program(32, unroll=True), 16, 16),
+        ("qrd-loop", assemble(qrd_asm_loop()), 256, 16),
+        ("reduction", assemble(reduction_grid_asm(64, 0, 64, True)), 64, 64),
+    ]
+
+
+_CASES = _programs_under_test()
+
+
+@pytest.mark.parametrize("name,prog,block,dim_x", _CASES,
+                         ids=[c[0] for c in _CASES])
+def test_trace_cycles_match_lockstep_machine(name, prog, block, dim_x):
+    # one block: trace.cycles == the device machine's cycles; steps too
+    dcfg = _dcfg(n_sms=1, gdepth=512, shmem_depth=1024, max_steps=50_000)
+    res = launch(dcfg, prog, grid=(1,), block=block, dim_x=dim_x)
+    tr = program_trace(prog, block, imem_depth=dcfg.sm.imem_depth,
+                       max_steps=dcfg.sm.max_steps)
+    assert tr.halted and res.halted
+    assert tr.cycles == res.cycles, name
+    assert tr.steps == res.steps, name
+    # n-block lockstep wave: static_cycles(n) == the wave machine's cycles
+    for n_sms in (2, 3):
+        dcfg_n = _dcfg(n_sms=n_sms, gdepth=512, shmem_depth=1024,
+                       max_steps=50_000)
+        res_n = launch(dcfg_n, prog, grid=(n_sms,), block=block, dim_x=dim_x)
+        assert tr.static_cycles(n_sms) == res_n.cycles, (name, n_sms)
+
+
+def test_trace_by_class_matches_machine():
+    prog = assemble(auto_nop("""
+        BID R1
+        GLD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        GST R3, (R1)+16
+        STO R3, (R1)+0
+        STOP
+    """, 16))
+    tr = program_trace(prog, 16)
+    res = launch(_dcfg(n_sms=3), prog, grid=(3,), block=16)
+    # the lockstep wave charges GMEM at wave_n x; the trace knows that view
+    assert tr.cycles_by_class(wave_n=3) == \
+        [int(c) for c in res.cycles_by_class]
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+def _word_strategy():
+    ops = st.sampled_from([Op.ADD, Op.MUL, Op.LODI, Op.TDX, Op.NOP,
+                           Op.LOD, Op.STO, Op.GLD, Op.GST, Op.DOT])
+    return st.builds(
+        lambda op, typ, w, d: Instr(
+            op=op, typ=typ, rd=1, ra=2, rb=3, width=w, depth=d),
+        ops, st.sampled_from(list(Typ)), st.sampled_from(list(Width)),
+        st.sampled_from(list(Depth)))
+
+
+@st.composite
+def _trace_set(draw):
+    n_programs = draw(st.integers(1, 3))
+    progs = []
+    for _ in range(n_programs):
+        instrs = draw(st.lists(_word_strategy(), min_size=1, max_size=12))
+        instrs.append(Instr(op=Op.STOP))
+        n_threads = draw(st.sampled_from([16, 64, 256]))
+        words = np.array([i.encode() for i in instrs], np.int64)
+        progs.append(program_trace(words, n_threads))
+    gmap = draw(st.lists(st.integers(0, n_programs - 1),
+                         min_size=1, max_size=12))
+    n_sms = draw(st.integers(1, 5))
+    return [progs[k] for k in gmap], n_sms
+
+
+@settings(max_examples=150, deadline=None)
+@given(ts=_trace_set())
+def test_every_block_scheduled_exactly_once_and_dynamic_never_slower(ts):
+    traces, n_sms = ts
+    stat = schedule_blocks(traces, n_sms, "static")
+    dyn = schedule_blocks(traces, n_sms, "dynamic")
+    for s in (stat, dyn):
+        # every block assigned to exactly one SM, executed exactly once
+        assert s.block_sm.shape == (len(traces),)
+        assert (s.block_sm >= 0).all() and (s.block_sm < n_sms).all()
+        assert int(s.sm_blocks.sum()) == len(traces)
+        # timeline sanity: finish = start + busy + wait, inside the makespan
+        np.testing.assert_array_equal(
+            s.block_finish, s.block_start + s.block_busy + s.block_wait)
+        assert (s.block_finish <= s.makespan).all()
+        assert (s.sm_idle >= 0).all()
+        # busy is schedule-independent (it is the trace's own cost)
+        np.testing.assert_array_equal(
+            s.block_busy, [t.cycles for t in traces])
+    # the acceptance property: work-queue dispatch never loses to waves
+    assert dyn.makespan <= stat.makespan
+
+
+@settings(max_examples=60, deadline=None)
+@given(ts=_trace_set(), seed=st.integers(0, 2**31 - 1))
+def test_schedule_invariant_to_dispatch_permutation_within_program(ts, seed):
+    """Permuting same-trace blocks in the queue never changes the makespan
+    multiset story: total busy is conserved and every block still runs."""
+    traces, n_sms = ts
+    perm = np.random.default_rng(seed).permutation(len(traces))
+    base = schedule_blocks(traces, n_sms, "dynamic")
+    shuf = schedule_blocks([traces[i] for i in perm], n_sms, "dynamic")
+    assert int(base.sm_busy.sum()) == int(shuf.sm_busy.sum())
+    assert int(base.sm_blocks.sum()) == int(shuf.sm_blocks.sum())
+
+
+# ---------------------------------------------------------------------------
+# launch-level: fast path vs dynamic, functional invariance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_blocks=st.integers(1, 6),
+       n_sms=st.integers(1, 4))
+def test_homogeneous_fast_path_vs_dynamic_bit_identical_property(
+        seed, n_blocks, n_sms):
+    """Any homogeneous launch: the lockstep fast path and the dynamic
+    scheduler produce bit-identical architectural state."""
+    rng = np.random.default_rng(seed)
+    ops = [Op.ADD, Op.MUL, Op.LODI, Op.TDX, Op.BID, Op.LOD, Op.STO,
+           Op.GLD, Op.GST]
+    instrs = [Instr(op=ops[int(rng.integers(0, len(ops)))],
+                    typ=Typ(int(rng.integers(0, 3))),
+                    rd=int(rng.integers(0, 16)), ra=0,
+                    rb=int(rng.integers(0, 16)),
+                    imm=int(rng.integers(0, 16)),
+                    width=Width(int(rng.integers(0, 4))),
+                    depth=Depth(int(rng.integers(0, 4))))
+              for _ in range(int(rng.integers(1, 10)))]
+    instrs.append(Instr(op=Op.STOP))
+    words = np.array([i.encode() for i in instrs], np.int64)
+    gmem = rng.standard_normal(64).astype(np.float32)
+    dcfg = _dcfg(n_sms=n_sms, gdepth=64, shmem_depth=64, max_steps=200)
+    res_s = launch(dcfg, words, grid=(n_blocks,), block=16, gmem=gmem,
+                   schedule="static")
+    res_d = launch(dcfg, words, grid=(n_blocks,), block=16, gmem=gmem,
+                   schedule="dynamic")
+    np.testing.assert_array_equal(np.asarray(res_s.regs),
+                                  np.asarray(res_d.regs))
+    np.testing.assert_array_equal(np.asarray(res_s.shmem),
+                                  np.asarray(res_d.shmem))
+    np.testing.assert_array_equal(np.asarray(res_s.gmem),
+                                  np.asarray(res_d.gmem))
+    np.testing.assert_array_equal(np.asarray(res_s.oob),
+                                  np.asarray(res_d.oob))
+    assert res_d.cycles <= res_s.cycles == res_d.static_cycles
+
+
+def test_homogeneous_dynamic_bit_identical_to_lockstep_fast_path():
+    prog = assemble(auto_nop("""
+        BID R7
+        TDX R1
+        LOD R8, #16
+        MUL.INT32 R9, R7, R8
+        ADD.INT32 R1, R9, R1
+        GLD R2, (R1)+0
+        ADD.FP32 R3, R2, R2
+        GST R3, (R1)+96
+        STO R3, (R1)+0
+        STOP
+    """, 16))
+    gmem = RNG.standard_normal(256).astype(np.float32)
+    dcfg = _dcfg(n_sms=4, shmem_depth=256)
+    res_s = launch(dcfg, prog, grid=(6,), block=16, gmem=gmem,
+                   schedule="static")
+    res_d = launch(dcfg, prog, grid=(6,), block=16, gmem=gmem,
+                   schedule="dynamic")
+    assert res_s.schedule == "static" and res_d.schedule == "dynamic"
+    # architectural state is invariant to the dispatch discipline
+    np.testing.assert_array_equal(np.asarray(res_s.regs),
+                                  np.asarray(res_d.regs))
+    np.testing.assert_array_equal(np.asarray(res_s.shmem),
+                                  np.asarray(res_d.shmem))
+    np.testing.assert_array_equal(np.asarray(res_s.gmem),
+                                  np.asarray(res_d.gmem))
+    # and dynamic cycles never exceed the wave schedule's
+    assert res_d.cycles <= res_s.cycles == res_d.static_cycles
+
+
+def test_heterogeneous_results_invariant_to_grid_map_permutation():
+    # two programs writing disjoint gmem slots keyed by PID and BID
+    prog = assemble(auto_nop("""
+        BID R1
+        PID R2
+        LOD R3, #32
+        MUL.INT32 R4, R2, R3
+        ADD.INT32 R5, R4, R1
+        LOD R6, #100
+        ADD.INT32 R7, R6, R1
+        GST R7, (R5)+0 {w1,d1}
+        STOP
+    """, 16)).words
+    kernels = [Kernel(prog, block=16, name="a"),
+               Kernel(prog, block=16, name="b")]
+    gmap = [0, 1, 0, 0, 1, 1, 0]
+    base = launch(_dcfg(), programs=kernels, grid_map=gmap)
+    want = np.asarray(base.gmem)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        perm = list(rng.permutation(gmap))
+        res = launch(_dcfg(), programs=kernels, grid_map=perm)
+        np.testing.assert_array_equal(np.asarray(res.gmem), want)
+
+
+def test_barrier_kernel_waits_for_all_prior_blocks():
+    slow = assemble("INIT 50\ntop:\nSTO R1, (R0)+0\nLOOP top\nSTOP").words
+    fast = assemble("GST R1, (R0)+1 {w1,d1}\nSTOP").words
+    res = launch(_dcfg(n_sms=2),
+                 programs=[Kernel(slow, block=64, name="slow"),
+                           Kernel(fast, block=16, name="fast",
+                                  barrier=True)],
+                 grid_map=[0, 0, 0, 1])
+    t = res.timing
+    fence = max(int(c) for c in t.block_finish[:3])
+    assert int(t.block_start[3]) >= fence
+
+
+def test_dynamic_backfills_imbalanced_grid():
+    # 1 long block + 6 short ones on 2 SMs: waves idle an SM while the
+    # long block runs; the queue keeps it busy
+    long_p = assemble("INIT 100\ntop:\nSTO R1, (R0)+0\nLOOP top\nSTOP").words
+    short_p = assemble("STO R1, (R0)+0\nSTOP").words
+    kernels = [Kernel(long_p, block=256, name="long"),
+               Kernel(short_p, block=256, name="short")]
+    gmap = [0] + [1] * 6
+    res_d = launch(_dcfg(n_sms=2), programs=kernels, grid_map=gmap,
+                   schedule="dynamic")
+    res_s = launch(_dcfg(n_sms=2), programs=kernels, grid_map=gmap,
+                   schedule="static")
+    assert res_d.cycles < res_s.cycles
+    assert res_d.static_cycles == res_s.cycles  # same wave baseline
+
+
+def test_fused_reduction_matches_two_launch_and_numpy():
+    from repro.core.programs import launch_reduction
+
+    x = RNG.standard_normal(4096).astype(np.float32)
+    tot_fused, res = launch_reduction(x, block=512, fused=True)
+    tot_two, _ = launch_reduction(x, block=512, fused=False)
+    assert tot_fused == tot_two                      # bit-identical folds
+    np.testing.assert_allclose(tot_fused, float(x.sum()), rtol=1e-4)
+    assert res.schedule == "dynamic"
+    names = list(res.profile()["per_program"])
+    assert names == ["reduce.stage1", "reduce.stage2"]
