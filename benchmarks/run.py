@@ -12,8 +12,9 @@ import sys
 
 
 def main() -> None:
-    from . import (kernel_bench, roofline_bench, table1_resources,
-                   table3_fft, table4_qrd, table5_resources)
+    from . import (engine_bench, kernel_bench, roofline_bench,
+                   table1_resources, table3_fft, table4_qrd,
+                   table5_resources)
 
     print("name,us_per_call,derived")
     table1_resources.run()
@@ -21,13 +22,15 @@ def main() -> None:
     table4_qrd.run()
     table5_resources.run()
     kernel_bench.run()
+    engine_bench.run()
     roofline_bench.run()
 
 
 def smoke() -> None:
     # importing every module is the point: a bitrotted benchmark fails here
-    from . import (kernel_bench, roofline_bench, table1_resources,  # noqa: F401
-                   table3_fft, table4_qrd, table5_resources)
+    from . import (engine_bench, kernel_bench, roofline_bench,  # noqa: F401
+                   table1_resources, table3_fft, table4_qrd,
+                   table5_resources)
     import numpy as np
 
     print("name,us_per_call,derived")
@@ -64,6 +67,9 @@ def smoke() -> None:
     assert mres.schedule == "dynamic" and mres.cycles <= mres.static_cycles
     print(f"smoke_mixed_launch,0.0,dynamic={mres.cycles} "
           f"static={mres.static_cycles}")
+    # step-vs-trace engine wall clock; writes BENCH_engine.json and gates
+    # CI on the trace engine not losing on the FFT/QRD lines
+    engine_bench.run(smoke=True)
     print("smoke_ok,0.0,all benchmark entry points importable")
 
 

@@ -10,7 +10,11 @@ Public API:
                                            block schedulers
     assemble, disassemble, check_hazards — assembler
     run, run_many                        — jitted ISS (single-wave shims)
-    execute_backends                     — pluggable ALU execute stages
+    execute_backends, ExecBackend        — pluggable execute-stage backends
+                                           (ALU + LOD/STO/GLD/GST data path)
+    TraceSchedule, compile_program       — trace-compiled execution engine
+                                           (decode-once lax.scan pipelines;
+                                           launch(..., engine="trace"))
     profile                              — Table III/IV-style cycle profile
     resources                            — Tables I/V + §III.E analytic model
 """
@@ -27,13 +31,16 @@ from .device import (
 )
 from .scheduler import Schedule, schedule_blocks
 from .executor import (
+    ExecBackend,
     execute_backends,
     get_execute_backend,
     pack_imem,
+    register_backend,
     register_execute_backend,
     run,
     run_many,
 )
+from .trace_engine import ENGINES, TraceSchedule, compile_program
 from .isa import CLASS_NAMES, Depth, Instr, Op, Typ, Width
 from .machine import (
     MachineState,
@@ -53,8 +60,10 @@ __all__ = [
     "DeviceConfig", "DeviceState", "Kernel", "LaunchResult", "buffer_layout",
     "launch", "pack_buffers",
     "Schedule", "schedule_blocks",
+    "ENGINES", "TraceSchedule", "compile_program",
     "pack_imem", "run", "run_many",
-    "execute_backends", "get_execute_backend", "register_execute_backend",
+    "ExecBackend", "execute_backends", "get_execute_backend",
+    "register_backend", "register_execute_backend",
     "CLASS_NAMES", "Depth", "Instr", "Op", "Typ", "Width",
     "MachineState", "SMConfig", "init_state", "profile",
     "regs_f32", "regs_i32", "shmem_f32", "shmem_i32",

@@ -121,6 +121,8 @@ class TraceInstr:
     cycles: int       # sequencer occupancy, n_sms=1 (= port occupancy
                       # for GLD/GST: one word per cycle)
     gmem: bool        # goes through the device-wide global-memory port
+    pc: int = 0       # I-MEM address issued from (lets the trace engine
+                      # re-read the full 40-bit word at lowering time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,7 +191,7 @@ def _trace_walk(words: tuple[int, ...], n_threads: int, imem_depth: int,
         out.append(TraceInstr(
             op=ins.op, klass=instr_class(ins.op, ins.typ),
             cycles=instr_cycles(ins, n_threads),
-            gmem=ins.op in (Op.GLD, Op.GST)))
+            gmem=ins.op in (Op.GLD, Op.GST), pc=pc))
         steps += 1
         op = ins.op
         # mirror device._device_step's h_ctl exactly (incl. index clipping)

@@ -33,10 +33,14 @@ running the same program therefore execute the identical PC trace, so one
 wave is simulated as a single batched machine: ONE shared sequencer state
 (pc, loop/return stacks, halt flag, cycle counters) plus per-SM data state
 (registers, shared memory) and the one shared global memory. This is exact
-— not an approximation — and it is what lets the per-step ALU execute
-stage run as one ``(n_sms, 512)`` batch through a pluggable backend
-(``executor.get_execute_backend``): the inline jnp path or the Pallas
-``simt_alu`` kernel as a single grid over the SM batch.
+— not an approximation — and it is what lets the whole per-step execute
+stage (ALU + LOD/STO/GLD/GST data path) run as one ``(n_sms, 512)`` batch
+through a pluggable backend (``executor.ExecBackend``): the inline jnp
+path or the Pallas ``simt_alu``/``simt_step`` kernels as grids over the
+SM batch. Functional waves run on one of two bit-identical ENGINES
+(``launch(..., engine=)``): the stepping machine below, or the
+trace-compiled scan of ``core.trace_engine`` (decode-once schedules; the
+default via ``"auto"``).
 
 The same property makes each block's *timing* a static function of its
 program (``cycles.program_trace``), which is how dynamic scheduling stays
@@ -67,14 +71,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import isa
+from . import isa, trace_engine
 from .cycles import ProgramTrace, program_trace
 from .isa import NUM_CLASSES, Op
 from .scheduler import SCHEDULES, Schedule, schedule_blocks
 from .machine import (
     LOOP_STACK_DEPTH,
     MAX_THREADS,
-    MAX_WAVES,
     N_REGS,
     N_SP,
     RET_STACK_DEPTH,
@@ -92,8 +95,10 @@ from .executor import (
     _G_SFU,
     _G_STO,
     _GROUP_OF_OP,
+    DATA_SEL_OF_OP,
     _decode,
     get_execute_backend,
+    make_data_handlers,
     pack_imem,
 )
 
@@ -104,10 +109,6 @@ _F32 = jnp.float32
 
 def _bitcast_f32(x):
     return jax.lax.bitcast_convert_type(x, _F32)
-
-
-def _bitcast_u32(x):
-    return jax.lax.bitcast_convert_type(x, _U32)
 
 
 # ---------------------------------------------------------------------------
@@ -121,11 +122,17 @@ class DeviceConfig:
     n_sms: int = 4                    # SMs packed in the sector (§III.E: 4)
     global_mem_depth: int = 4096      # words of the shared global segment
     sm: SMConfig = SMConfig()         # per-SM template (block size is set
-                                      # per launch; the rest is inherited)
+                                      # per launch; the rest is inherited;
+                                      # imem/shmem depth are the CEILING for
+                                      # per-Kernel overrides)
     backend: str = "inline"           # default execute backend
     schedule: str = "auto"            # default block-dispatch discipline:
                                       # "static" waves | "dynamic" queue |
                                       # "auto" (static iff one program)
+    engine: str = "auto"              # default functional engine:
+                                      # "step" while-loop machine | "trace"
+                                      # decode-once scan | "auto" (trace
+                                      # whenever the static trace halts)
 
     def __post_init__(self):
         if self.n_sms < 1:
@@ -135,6 +142,9 @@ class DeviceConfig:
         if self.schedule not in SCHEDULES + ("auto",):
             raise ValueError(f"schedule={self.schedule!r} must be one of "
                              f"{SCHEDULES + ('auto',)}")
+        if self.engine not in trace_engine.ENGINES + ("auto",):
+            raise ValueError(f"engine={self.engine!r} must be one of "
+                             f"{trace_engine.ENGINES + ('auto',)}")
 
 
 @jax.tree_util.register_dataclass
@@ -230,19 +240,7 @@ def squeeze_device_state(s: DeviceState) -> MachineState:
 # the batched device step
 # ---------------------------------------------------------------------------
 
-def _last_writer_write(mem, addr, vals, do, order):
-    """Serialized single-port store: among enabled writers to the same
-    address, the one latest in ``order`` wins (thread order within an SM;
-    (sm, thread)-major order device-wide for global memory). Implemented
-    with a commutative scatter-max so it is deterministic under jit."""
-    depth = mem.shape[0]
-    slot = jnp.where(do, addr, depth)                    # park masked writes
-    winner = jnp.full((depth + 1,), -1, _I32).at[slot].max(order)
-    write = do & (winner[slot] == order)
-    return mem.at[jnp.where(write, addr, depth)].set(vals, mode="drop")
-
-
-def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
+def _device_step(cfg: SMConfig, backend, imem_lo, imem_hi, block_idx,
                  prog_idx, s: DeviceState) -> DeviceState:
     n_sms = s.regs.shape[0]
     d = _decode(imem_lo[s.pc], imem_hi[s.pc])
@@ -259,154 +257,46 @@ def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
     act_wthreads = width_table[d["width"]]
     active = (lane < act_wthreads) & (wave < act_waves) & (tid < cfg.n_threads)
 
-    # ---- operand reads (with thread snooping), batched over SMs ------------
-    snoop = d["x"] == 1
-    ra_tid = jnp.where(snoop, d["ext_a"] * N_SP + lane, tid)
-    rb_tid = jnp.where(snoop, d["ext_b"] * N_SP + lane, tid)
-    a_u = s.regs[:, ra_tid, d["ra"]]          # (n_sms, 512)
-    b_u = s.regs[:, rb_tid, d["rb"]]
-    a_i = jax.lax.bitcast_convert_type(a_u, _I32)
+    op = d["opcode"]
 
-    op, typ = d["opcode"], d["typ"]
-    is_fp = typ == int(isa.Typ.FP32)
+    # ---- data path: the shared execute stage (executor.make_data_handlers) --
+    handlers = make_data_handlers(cfg, backend, d, active, block_idx,
+                                  prog_idx)
+    sel = jnp.asarray(DATA_SEL_OF_OP)[op]
+    regs, shmem, gmem, oob = jax.lax.switch(
+        sel, handlers, (s.regs, s.shmem, s.gmem, s.oob))
 
-    def col(regs, rd):
-        return jnp.take(regs, rd, axis=2)     # (n_sms, 512)
-
-    def set_col(regs, rd, vals):
-        return regs.at[:, :, rd].set(vals)
-
-    def write_active(regs, rd, vals, mask):
-        return set_col(regs, rd, jnp.where(mask, vals, col(regs, rd)))
-
-    # ---- group handlers -----------------------------------------------------
-
-    def h_nop(s):
-        return s
-
-    def h_alu(s):
-        old = col(s.regs, d["rd"])
-        mask = jnp.broadcast_to(active, old.shape)
-        res = execute(op, typ, a_u, b_u, mask, old)
-        return s.replace(regs=set_col(s.regs, d["rd"], res))
-
-    def h_lod(s):
-        addr = a_i + d["imm"]
-        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
-        safe = jnp.clip(addr, 0, cfg.shmem_depth - 1)
-        vals = jnp.take_along_axis(s.shmem, safe, axis=1)
-        regs = write_active(s.regs, d["rd"], vals, active & ~bad)
-        return s.replace(regs=regs, oob=s.oob | bad.any(axis=1))
-
-    def h_sto(s):
-        addr = a_i + d["imm"]
-        bad = active & ((addr < 0) | (addr >= cfg.shmem_depth))
-        vals = col(s.regs, d["rd"])
-        do = active & ~bad
-        shmem = jax.vmap(_last_writer_write, in_axes=(0, 0, 0, 0, None))(
-            s.shmem, addr, vals, do, tid)
-        return s.replace(shmem=shmem, oob=s.oob | bad.any(axis=1))
-
-    def h_gld(s):
-        gdepth = s.gmem.shape[0]
-        addr = a_i + d["imm"]
-        bad = active & ((addr < 0) | (addr >= gdepth))
-        safe = jnp.clip(addr, 0, gdepth - 1)
-        vals = s.gmem[safe]                   # (n_sms, 512) gather
-        regs = write_active(s.regs, d["rd"], vals, active & ~bad)
-        return s.replace(regs=regs, oob=s.oob | bad.any(axis=1))
-
-    def h_gst(s):
-        gdepth = s.gmem.shape[0]
-        addr = a_i + d["imm"]
-        bad = active & ((addr < 0) | (addr >= gdepth))
-        vals = col(s.regs, d["rd"])
-        do = active & ~bad
-        # the single device-wide port drains in (sm, thread) order
-        order = jnp.arange(n_sms * MAX_THREADS, dtype=_I32)
-        gmem = _last_writer_write(s.gmem, addr.reshape(-1), vals.reshape(-1),
-                                  do.reshape(-1), order)
-        return s.replace(gmem=gmem, oob=s.oob | bad.any(axis=1))
-
-    def h_lodi(s):
-        as_f = _bitcast_u32(d["imm"].astype(_F32))
-        val = jnp.where(is_fp, as_f, d["imm"].astype(_U32))
-        vals = jnp.broadcast_to(val, (n_sms, MAX_THREADS))
-        return s.replace(regs=write_active(s.regs, d["rd"], vals, active))
-
-    def h_td(s):
-        x = (tid % cfg.dim_x).astype(_U32)[None]            # (1, 512)
-        y = (tid // cfg.dim_x).astype(_U32)[None]
-        bid = jnp.broadcast_to(block_idx.astype(_U32)[:, None],
-                               (n_sms, MAX_THREADS))
-        pid = jnp.broadcast_to(prog_idx.astype(_U32)[:, None],
-                               (n_sms, MAX_THREADS))
-        vals = jnp.where(op == int(Op.TDX), x,
-                         jnp.where(op == int(Op.TDY), y,
-                                   jnp.where(op == int(Op.BID), bid, pid)))
-        return s.replace(regs=write_active(s.regs, d["rd"], vals, active))
-
-    def h_red(s):
-        # DOT/SUM: reduce each active wavefront across its active lanes,
-        # write the result to lane 0 of that wavefront (the first SP).
-        lane_active = active.reshape(MAX_WAVES, N_SP)
-        a2 = _bitcast_f32(a_u).reshape(n_sms, MAX_WAVES, N_SP)
-        b2 = _bitcast_f32(b_u).reshape(n_sms, MAX_WAVES, N_SP)
-        prod = jnp.where(op == int(Op.DOT), a2 * b2, a2 + b2)
-        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
-        wave_active = lane_active.any(axis=1)               # (waves,)
-        dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP     # lane 0 per wave
-        cur = s.regs[:, dest, d["rd"]]                      # (n_sms, waves)
-        new = jnp.where(wave_active[None], _bitcast_u32(red), cur)
-        return s.replace(regs=s.regs.at[:, dest, d["rd"]].set(new))
-
-    def h_sfu(s):
-        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source)
-        src_tid = jnp.where(snoop, d["ext_a"] * N_SP, 0)
-        val = _bitcast_f32(s.regs[:, src_tid, d["ra"]])     # (n_sms,)
-        r = jax.lax.rsqrt(val)
-        return s.replace(regs=s.regs.at[:, 0, d["rd"]].set(_bitcast_u32(r)))
-
-    def h_ctl(s):
-        imm = d["imm_raw"]
-        pc1 = s.pc + 1
-        # LOOP: decrement top counter; jump while > 1, pop at 1
-        lsp = jnp.clip(s.loop_sp - 1, 0, LOOP_STACK_DEPTH - 1)
-        top = s.loop_ctr[lsp]
-        loop_taken = top > 1
-        new_pc = jnp.select(
-            [op == int(Op.JMP), op == int(Op.JSR), op == int(Op.RTS),
-             op == int(Op.LOOP)],
-            [imm, imm,
-             s.ret_stack[jnp.clip(s.ret_sp - 1, 0, RET_STACK_DEPTH - 1)],
-             jnp.where(loop_taken, imm, pc1)],
-            pc1)
-        ret_stack = jnp.where(
-            op == int(Op.JSR),
-            s.ret_stack.at[jnp.clip(s.ret_sp, 0, RET_STACK_DEPTH - 1)].set(pc1),
-            s.ret_stack)
-        ret_sp = s.ret_sp + jnp.where(op == int(Op.JSR), 1, 0) \
-            - jnp.where(op == int(Op.RTS), 1, 0)
-        loop_ctr = jnp.where(
-            op == int(Op.INIT),
-            s.loop_ctr.at[jnp.clip(s.loop_sp, 0, LOOP_STACK_DEPTH - 1)].set(imm),
-            jnp.where(op == int(Op.LOOP),
-                      s.loop_ctr.at[lsp].set(top - 1), s.loop_ctr))
-        loop_sp = s.loop_sp \
-            + jnp.where(op == int(Op.INIT), 1, 0) \
-            - jnp.where((op == int(Op.LOOP)) & ~loop_taken, 1, 0)
-        halted = s.halted | (op == int(Op.STOP))
-        return s.replace(pc=new_pc, ret_stack=ret_stack, ret_sp=ret_sp,
-                         loop_ctr=loop_ctr, loop_sp=loop_sp, halted=halted)
-
-    handlers = [h_nop, h_alu, h_lod, h_sto, h_lodi, h_td, h_red, h_sfu,
-                h_ctl, h_gld, h_gst]
+    # ---- sequencer: control flow (unconditional scalar math — non-control
+    # opcodes match none of the branches, so stacks stay put and pc += 1) ----
+    imm = d["imm_raw"]
+    pc1 = s.pc + 1
+    # LOOP: decrement top counter; jump while > 1, pop at 1
+    lsp = jnp.clip(s.loop_sp - 1, 0, LOOP_STACK_DEPTH - 1)
+    top = s.loop_ctr[lsp]
+    loop_taken = top > 1
+    pc = jnp.select(
+        [op == int(Op.JMP), op == int(Op.JSR), op == int(Op.RTS),
+         op == int(Op.LOOP)],
+        [imm, imm,
+         s.ret_stack[jnp.clip(s.ret_sp - 1, 0, RET_STACK_DEPTH - 1)],
+         jnp.where(loop_taken, imm, pc1)],
+        pc1)
+    ret_stack = jnp.where(
+        op == int(Op.JSR),
+        s.ret_stack.at[jnp.clip(s.ret_sp, 0, RET_STACK_DEPTH - 1)].set(pc1),
+        s.ret_stack)
+    ret_sp = s.ret_sp + jnp.where(op == int(Op.JSR), 1, 0) \
+        - jnp.where(op == int(Op.RTS), 1, 0)
+    loop_ctr = jnp.where(
+        op == int(Op.INIT),
+        s.loop_ctr.at[jnp.clip(s.loop_sp, 0, LOOP_STACK_DEPTH - 1)].set(imm),
+        jnp.where(op == int(Op.LOOP),
+                  s.loop_ctr.at[lsp].set(top - 1), s.loop_ctr))
+    loop_sp = s.loop_sp \
+        + jnp.where(op == int(Op.INIT), 1, 0) \
+        - jnp.where((op == int(Op.LOOP)) & ~loop_taken, 1, 0)
+    halted = s.halted | (op == int(Op.STOP))
     group = jnp.asarray(_GROUP_OF_OP)[op]
-    s2 = jax.lax.switch(group, handlers, s)
-
-    # ---- pc advance (control group already set it) --------------------------
-    is_ctl = group == _G_CTL
-    pc = jnp.where(is_ctl, s2.pc, s.pc + 1)
 
     # ---- cycle accounting ----------------------------------------------------
     # Per-SM resources (ALU, shared memory, extension units) run concurrently
@@ -421,12 +311,12 @@ def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
         [jnp.maximum(one, (act_threads + 3) // 4), act_threads,
          act_threads * n_sms, one],
         act_waves)
-    klass = jnp.asarray(_CLASS_OF)[op, typ]
+    klass = jnp.asarray(_CLASS_OF)[op, d["typ"]]
     return DeviceState(
-        regs=s2.regs, shmem=s2.shmem, gmem=s2.gmem, pc=pc,
-        ret_stack=s2.ret_stack, ret_sp=s2.ret_sp,
-        loop_ctr=s2.loop_ctr, loop_sp=s2.loop_sp,
-        halted=s2.halted, oob=s2.oob,
+        regs=regs, shmem=shmem, gmem=gmem, pc=pc,
+        ret_stack=ret_stack, ret_sp=ret_sp,
+        loop_ctr=loop_ctr, loop_sp=loop_sp,
+        halted=halted, oob=oob,
         steps=s.steps + 1,
         cycles=s.cycles + cyc,
         cycles_by_class=s.cycles_by_class.at[klass].add(cyc),
@@ -436,7 +326,13 @@ def _device_step(cfg: SMConfig, execute, imem_lo, imem_hi, block_idx,
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def run_wave(cfg: SMConfig, backend: str, imem_lo, imem_hi, block_idx,
              prog_idx, state: DeviceState) -> DeviceState:
-    """Run one wave of blocks to completion (jitted ``lax.while_loop``)."""
+    """Run one wave of blocks to completion (jitted ``lax.while_loop``).
+
+    This is the STEP engine: fetch/decode/dispatch per instruction. The
+    trace engine (``core.trace_engine``) is the decode-once fast path;
+    this machine survives as the differential oracle and the executor of
+    legacy ``run``/``run_many`` shims.
+    """
     execute = get_execute_backend(backend)
 
     def cond(s):
@@ -499,6 +395,21 @@ class Kernel:
     blocks wait until every block of all earlier-listed programs retired
     (a device-wide dependency fence — the stream semantic for dependent
     kernels such as the two stages of a grid reduction).
+
+    ``imem_depth``/``shmem_depth`` override the device-wide ``SMConfig``
+    defaults for THIS program only (e.g. a small kernel that wants tight
+    out-of-range checking, or a long unrolled one that needs the full
+    I-MEM); both are validated against the device ceiling — an SM cannot
+    grow memory past what the sector floorplan gives it. Blocks with a
+    shallower shared memory are zero-padded back to the device depth in
+    ``LaunchResult.shmem`` so mixed launches still stack.
+
+    ``priority`` orders the DYNAMIC dispatch queue: ready blocks of a
+    higher-priority program are pulled first; ties keep FIFO grid order
+    (priority 0, the default, is plain FIFO — bit-identical scheduling to
+    a priority-free launch). The static wave schedule ignores priority
+    (waves are grid order by definition), and functional results are
+    schedule-invariant either way.
     """
 
     program: Any                      # Program | encoded 40-bit word array
@@ -506,6 +417,9 @@ class Kernel:
     dim_x: int | None = None
     name: str | None = None
     barrier: bool = False
+    imem_depth: int | None = None
+    shmem_depth: int | None = None
+    priority: int = 0
 
 
 def as_kernel(p: Any) -> Kernel:
@@ -531,6 +445,7 @@ class LaunchResult:
     buffer_offsets: dict[str, tuple[int, int]] | None = None
     # scheduling (None only for results built by legacy external code)
     schedule: str = "static"            # "static" | "dynamic"
+    engine: str = "step"                # "step" | "trace" functional engine
     program_names: tuple[str, ...] = ("k0",)
     grid_map: np.ndarray | None = None  # (n_blocks,) block -> program idx
     timing: Schedule | None = None      # per-SM / per-block timeline
@@ -573,6 +488,7 @@ class LaunchResult:
             "total_cycles": int(self.cycles),
             "instructions": int(self.steps),
             "schedule": self.schedule,
+            "engine": self.engine,
             "n_waves": self.n_waves,
             "wave_cycles": [int(c) for c in self.wave_cycles],
             "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
@@ -639,6 +555,20 @@ def _kernel_shmem(sh: Any, depth: int, count: int, k: int):
     return batch
 
 
+def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
+                    traces: Sequence[ProgramTrace]) -> str:
+    mode = engine if engine is not None else dcfg.engine
+    if mode == "auto":
+        # the trace engine materializes the full issued schedule; a
+        # fuel-limited (non-halting) trace means a runaway program, where
+        # the step machine's O(1) schedule memory is the right tool
+        return "trace" if all(t.halted for t in traces) else "step"
+    if mode not in trace_engine.ENGINES:
+        raise ValueError(f"engine={mode!r} must be one of "
+                         f"{trace_engine.ENGINES + ('auto',)}")
+    return mode
+
+
 def launch(dcfg: DeviceConfig, program=None, grid=None,
            block: int | None = None, *,
            programs: Sequence[Any] | None = None,
@@ -646,7 +576,8 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
            buffers: Mapping[str, Any] | None = None,
            shmem: Any = None, gmem: Any = None,
            backend: str | None = None, dim_x: int | None = None,
-           schedule: str | None = None) -> LaunchResult:
+           schedule: str | None = None,
+           engine: str | None = None) -> LaunchResult:
     """CUDA-style kernel launch on the multi-SM device.
 
     Two forms:
@@ -683,6 +614,15 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         (per-SM sequencers pulling from the block work queue), or "auto"
         (default: static when all blocks share one program — the exact
         lockstep fast path — dynamic otherwise).
+      engine: functional execution engine. "step" is the classic
+        fetch/decode/dispatch ``lax.while_loop`` machine; "trace" lowers
+        each program once into a pre-decoded structure-of-arrays schedule
+        and runs it as a single jitted ``lax.scan`` (no runtime decode, no
+        dynamic pc, NOP/control steps compiled out — see
+        ``core.trace_engine``); "auto" (default) picks "trace" whenever
+        every program's static trace terminates, falling back to "step"
+        for runaway/fuel-limited programs. Both engines are bit-identical
+        on every backend; timing is engine-independent.
 
     Timing comes from ``core.scheduler`` over the programs' static traces;
     architectural results are computed by the exact lockstep batch machine
@@ -729,16 +669,34 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     cfgs: list[SMConfig] = []
     imems: list[tuple[jax.Array, jax.Array]] = []
     traces: list[ProgramTrace] = []
+    word_arrays: list[np.ndarray] = []
     for k, kern in enumerate(kernels):
         blk = int(kern.block) if kern.block is not None \
             else dcfg.sm.n_threads
+        overrides = {}
+        for field, ceiling in (("imem_depth", dcfg.sm.imem_depth),
+                               ("shmem_depth", dcfg.sm.shmem_depth)):
+            val = getattr(kern, field)
+            if val is None:
+                continue
+            val = int(val)
+            if val < 1:
+                raise ValueError(f"{field}={val} of program {k} must be "
+                                 f">= 1")
+            if val > ceiling:
+                raise ValueError(
+                    f"{field}={val} of program {k} exceeds the device "
+                    f"ceiling {ceiling} (DeviceConfig.sm.{field})")
+            overrides[field] = val
         cfg = dataclasses.replace(
             dcfg.sm, n_threads=blk,
-            dim_x=kern.dim_x if kern.dim_x is not None else blk)
+            dim_x=kern.dim_x if kern.dim_x is not None else blk,
+            **overrides)
         words = kern.program.words if hasattr(kern.program, "words") \
             else np.asarray(kern.program)
         lo, hi = pack_imem(words, cfg.imem_depth)
         cfgs.append(cfg)
+        word_arrays.append(np.asarray(words))
         imems.append((jnp.asarray(lo), jnp.asarray(hi)))
         traces.append(program_trace(words, blk, imem_depth=cfg.imem_depth,
                                     max_steps=cfg.max_steps))
@@ -746,13 +704,21 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         while name in names:
             name = f"{name}.{k}"
         names.append(name)
+    eng = _resolve_engine(engine, dcfg, traces)
+    # lower only the kernels that actually own blocks in this grid
+    scheds = [trace_engine.compile_program(w, c)
+              if eng == "trace" and (gmap == k).any() else None
+              for k, (w, c) in enumerate(zip(word_arrays, cfgs))]
 
     # ---- the schedule (timing) ------------------------------------------
     phase_of_kernel = np.cumsum([int(k.barrier) for k in kernels])
     block_phase = phase_of_kernel[gmap]
+    block_priority = np.asarray([kernels[k].priority for k in gmap],
+                                np.int64)
     block_traces = [traces[k] for k in gmap]
     timing = schedule_blocks(block_traces, dcfg.n_sms, mode,
-                             phase_of=block_phase)
+                             phase_of=block_phase,
+                             priority_of=block_priority)
     if mode == "static":
         static_span = timing.makespan
     else:
@@ -777,6 +743,7 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     wave_cycles, wave_steps = [], []
     machine_by = np.zeros((NUM_CLASSES,), np.int64)
     halted = True
+    shmem_pad = dcfg.sm.shmem_depth
     for k, kern in enumerate(kernels):
         pos = np.flatnonzero(gmap == k)
         if pos.size == 0:
@@ -792,11 +759,21 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
                 gmem=gm)
             bidx = jnp.arange(w0, w1, dtype=_I32)   # program-local BID
             pidx = jnp.full((n,), k, dtype=_I32)
-            fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
+            if eng == "trace":
+                fin = trace_engine.run_wave_trace(cfg, backend, scheds[k],
+                                                  bidx, pidx, st)
+            else:
+                fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
             gm = fin.gmem                   # batches run back to back
+            fin_shmem = fin.shmem
+            if cfg.shmem_depth < shmem_pad:
+                # per-Kernel shmem_depth override: pad back to the device
+                # depth so mixed launches still stack in LaunchResult
+                fin_shmem = jnp.pad(
+                    fin_shmem, ((0, 0), (0, shmem_pad - cfg.shmem_depth)))
             for i, b in enumerate(pos[w0:w1]):
                 regs_slots[b] = fin.regs[i]
-                shmem_slots[b] = fin.shmem[i]
+                shmem_slots[b] = fin_shmem[i]
                 oob_slots[b] = fin.oob[i]
             wave_cycles.append(int(fin.cycles))
             wave_steps.append(int(fin.steps))
@@ -836,6 +813,7 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         cycles_by_class=by_class.astype(np.int64),
         buffer_offsets=offsets,
         schedule=mode,
+        engine=eng,
         program_names=tuple(names),
         grid_map=gmap,
         timing=timing,

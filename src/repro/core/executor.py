@@ -27,23 +27,34 @@ owns the pieces every step needs:
 
   * ``pack_imem`` / ``_decode`` — the 40-bit I-word field extraction;
   * the opcode -> handler-group and opcode -> profile-class tables;
-  * the **pluggable execute backends** for the ALU stage. The execute
-    stage consumes pre-gathered ``(n_sms, 512)`` uint32 operand tiles and
-    produces the masked destination column. Two implementations ship:
+  * the **shared execute stage** (``make_data_handlers``): the data-path
+    handlers of every instruction group, dispatched by BOTH engines — the
+    stepping machine (``device._device_step``) and the trace-compiled
+    scan (``core.trace_engine``) — so the two are bit-identical by
+    construction;
+  * the **pluggable execute backends** (``ExecBackend``). Since the
+    trace-engine refactor the seam covers the whole execute stage: the
+    ALU column plus the LOD/STO quad-read/single-write-port
+    gather/scatter and the GLD/GST global accesses. Two implementations
+    ship:
 
-      - ``"inline"``  — straight jnp (the ``kernels.ref`` oracle);
-      - ``"pallas"``  — the ``kernels.simt_alu`` Pallas TPU kernel, so a
-        multi-SM step executes as ONE Pallas grid over the SM batch
+      - ``"inline"``  — straight jnp (the ``kernels.ref`` oracle + the
+        scatter-max port-serialization trick);
+      - ``"pallas"``  — the ``kernels.simt_alu`` ALU kernel and the
+        ``kernels.simt_step`` gather/scatter kernels, so a multi-SM
+        step's data path executes as Pallas grids over the SM batch
         (interpreted on CPU, compiled on TPU).
 
     Both are bit-exact by construction and selected per run via
     ``run(..., backend=...)`` / ``DeviceConfig.backend``.
 
 ``run`` and ``run_many`` are preserved as single-wave shims over the
-device layer; new code should use ``device.launch``.
+device layer (always on the step machine); new code should use
+``device.launch``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -123,30 +134,102 @@ for _op in Op:
 
 
 # ---------------------------------------------------------------------------
-# pluggable execute backends (the per-step ALU execute stage)
+# pluggable execute backends (the whole per-step execute stage)
 # ---------------------------------------------------------------------------
 #
-# An execute backend implements one SIMT ALU instruction over an SM batch:
+# A backend implements the data-path operations of one instruction over an
+# SM batch. Since the trace-engine refactor the seam covers the WHOLE
+# execute stage, not just the ALU:
 #
-#     fn(op, typ, a, b, mask, old) -> (n_sms, 512) uint32
+#   alu(op, typ, a, b, mask, old)   -> (n_sms, 512) destination column
+#   lod(shmem, addr, mask, old)     -> (n_sms, 512) quad-port gather
+#   sto(shmem, addr, vals, do)      -> (n_sms, depth) single-port scatter
+#                                      (last active thread wins)
+#   gld(gmem, addr, mask, old)      -> (n_sms, 512) global gather
+#   gst(gmem, addr, vals, do)       -> (gdepth,) device-wide scatter
+#                                      (last (sm, thread) writer wins)
 #
-# ``op``/``typ`` are traced i32 scalars (the decoded fields), ``a``/``b``
-# pre-gathered source-operand tiles, ``mask`` the flexible-ISA active-thread
-# mask, ``old`` the current destination column (inactive threads keep it).
+# ``op``/``typ`` are traced i32 scalars (decoded fields), ``a``/``b``
+# pre-gathered source-operand tiles, ``mask``/``do`` the flexible-ISA
+# active-thread mask (with out-of-range lanes already dropped), ``addr``
+# pre-clipped to the memory depth for the gathers and raw for the scatters.
+# All five ops must be bit-exact across backends; both engines (the
+# stepping machine and the trace engine) drive them through
+# ``make_data_handlers`` below, so functional semantics are shared by
+# construction.
 
-ExecuteBackend = Callable[..., jax.Array]
+ExecuteOp = Callable[..., jax.Array]
 
-_EXECUTE_BACKENDS: dict[str, ExecuteBackend] = {}
+
+def _last_writer_write(mem, addr, vals, do, order):
+    """Serialized single-port store: among enabled writers to the same
+    address, the one latest in ``order`` wins (thread order within an SM;
+    (sm, thread)-major order device-wide for global memory). Implemented
+    with a commutative scatter-max so it is deterministic under jit."""
+    depth = mem.shape[0]
+    slot = jnp.where(do, addr, depth)                    # park masked writes
+    winner = jnp.full((depth + 1,), -1, _I32).at[slot].max(order)
+    write = do & (winner[slot] == order)
+    return mem.at[jnp.where(write, addr, depth)].set(vals, mode="drop")
+
+
+def _inline_alu(op, typ, a, b, mask, old) -> jax.Array:
+    """Straight-jnp ALU stage (the ``kernels.ref`` oracle)."""
+    from ..kernels.ref import alu_ref
+
+    return jnp.where(mask, alu_ref(op, typ, a, b), old)
+
+
+def _inline_lod(shmem, addr, mask, old) -> jax.Array:
+    return jnp.where(mask, jnp.take_along_axis(shmem, addr, axis=1), old)
+
+
+def _inline_sto(shmem, addr, vals, do) -> jax.Array:
+    tid = jnp.arange(addr.shape[1], dtype=_I32)
+    return jax.vmap(_last_writer_write, in_axes=(0, 0, 0, 0, None))(
+        shmem, addr, vals, do, tid)
+
+
+def _inline_gld(gmem, addr, mask, old) -> jax.Array:
+    return jnp.where(mask, gmem[addr], old)
+
+
+def _inline_gst(gmem, addr, vals, do) -> jax.Array:
+    order = jnp.arange(addr.size, dtype=_I32)
+    return _last_writer_write(gmem, addr.reshape(-1), vals.reshape(-1),
+                              do.reshape(-1), order)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecBackend:
+    """One named implementation of the execute-stage data path."""
+
+    name: str
+    alu: ExecuteOp = _inline_alu
+    lod: ExecuteOp = _inline_lod
+    sto: ExecuteOp = _inline_sto
+    gld: ExecuteOp = _inline_gld
+    gst: ExecuteOp = _inline_gst
+
+
+_EXECUTE_BACKENDS: dict[str, ExecBackend] = {}
+
+
+def register_backend(backend: ExecBackend) -> ExecBackend:
+    _EXECUTE_BACKENDS[backend.name] = backend
+    return backend
 
 
 def register_execute_backend(name: str):
-    def deco(fn: ExecuteBackend) -> ExecuteBackend:
-        _EXECUTE_BACKENDS[name] = fn
+    """Back-compat decorator: register an ALU-only backend; the memory
+    ops inherit the inline jnp implementations."""
+    def deco(fn: ExecuteOp) -> ExecuteOp:
+        register_backend(ExecBackend(name=name, alu=fn))
         return fn
     return deco
 
 
-def get_execute_backend(name: str) -> ExecuteBackend:
+def get_execute_backend(name: str) -> ExecBackend:
     try:
         return _EXECUTE_BACKENDS[name]
     except KeyError:
@@ -159,17 +242,11 @@ def execute_backends() -> tuple[str, ...]:
     return tuple(sorted(_EXECUTE_BACKENDS))
 
 
-@register_execute_backend("inline")
-def _inline_execute(op, typ, a, b, mask, old) -> jax.Array:
-    """Straight-jnp execute stage (the ``kernels.ref`` oracle)."""
-    from ..kernels.ref import alu_ref
-
-    return jnp.where(mask, alu_ref(op, typ, a, b), old)
+register_backend(ExecBackend(name="inline"))
 
 
-@register_execute_backend("pallas")
-def _pallas_execute(op, typ, a, b, mask, old) -> jax.Array:
-    """Pallas execute stage: one ``simt_alu`` grid over the SM batch."""
+def _pallas_alu(op, typ, a, b, mask, old) -> jax.Array:
+    """Pallas ALU stage: one ``simt_alu`` grid over the SM batch."""
     from ..kernels import ops
     from ..kernels.simt_alu import simt_alu
 
@@ -179,6 +256,216 @@ def _pallas_execute(op, typ, a, b, mask, old) -> jax.Array:
     return simt_alu(op.astype(_I32), typ.astype(_I32), a, b,
                     mask.astype(_U32), old,
                     interpret=ops.INTERPRET, block_sm=block_sm)
+
+
+def _pallas_lod(shmem, addr, mask, old) -> jax.Array:
+    from ..kernels import ops
+    from ..kernels.simt_step import simt_gather
+
+    return simt_gather(shmem, addr, mask.astype(_U32), old,
+                       interpret=ops.INTERPRET)
+
+
+def _pallas_sto(shmem, addr, vals, do) -> jax.Array:
+    from ..kernels import ops
+    from ..kernels.simt_step import simt_scatter
+
+    return simt_scatter(shmem, addr, vals, do.astype(_U32),
+                        interpret=ops.INTERPRET)
+
+
+def _pallas_gld(gmem, addr, mask, old) -> jax.Array:
+    from ..kernels import ops
+    from ..kernels.simt_step import simt_gather_shared
+
+    return simt_gather_shared(gmem, addr, mask.astype(_U32), old,
+                              interpret=ops.INTERPRET)
+
+
+def _pallas_gst(gmem, addr, vals, do) -> jax.Array:
+    from ..kernels import ops
+    from ..kernels.simt_step import simt_scatter_shared
+
+    return simt_scatter_shared(gmem, addr, vals, do.astype(_U32),
+                               interpret=ops.INTERPRET)
+
+
+register_backend(ExecBackend(
+    name="pallas", alu=_pallas_alu, lod=_pallas_lod, sto=_pallas_sto,
+    gld=_pallas_gld, gst=_pallas_gst))
+
+
+# ---------------------------------------------------------------------------
+# the shared execute stage (both engines dispatch into these handlers)
+# ---------------------------------------------------------------------------
+#
+# The data path of one instruction over a lockstep SM batch, factored out
+# of the stepping machine so the trace engine executes the IDENTICAL
+# handler graph: ``device._device_step`` (decode-per-step) and
+# ``trace_engine`` (decode-once ``lax.scan``) both build their dispatch
+# from ``make_data_handlers``. Handler order is fixed; ``DATA_SEL_OF_GROUP``
+# maps a handler group to its 1-based switch branch (0 = no data effect:
+# NOP and control, whose sequencer effects the engines handle themselves).
+
+# handler-group -> data-switch branch (0 = identity)
+DATA_SEL_OF_GROUP = np.zeros((11,), np.int32)
+for _g, _sel in {_G_ALU: 1, _G_LOD: 2, _G_STO: 3, _G_LODI: 4, _G_TD: 5,
+                 _G_RED: 6, _G_SFU: 7, _G_GLD: 8, _G_GST: 9}.items():
+    DATA_SEL_OF_GROUP[_g] = _sel
+
+# opcode -> data-switch branch
+DATA_SEL_OF_OP = DATA_SEL_OF_GROUP[_GROUP_OF_OP]
+
+
+def make_data_handlers(cfg, backend: ExecBackend, d: dict,
+                       active: jax.Array, block_idx: jax.Array,
+                       prog_idx: jax.Array):
+    """Build the 10-way data-path switch body for one decoded instruction.
+
+    ``d`` holds the decoded fields as traced i32 scalars (the dict from
+    ``_decode`` or one step of the trace engine's pre-decoded schedule);
+    ``active`` is the (512,) flexible-ISA thread mask. Returns a list of
+    handlers over the data-state tuple ``(regs, shmem, gmem, oob)`` —
+    index it with ``DATA_SEL_OF_GROUP[group]`` (branch 0 is the identity
+    for NOP/control). Sequencer state (pc, stacks, halt) is each engine's
+    own business.
+    """
+    from .machine import MAX_THREADS, MAX_WAVES, N_SP
+
+    tid = jnp.arange(MAX_THREADS, dtype=_I32)
+    lane = tid % N_SP
+
+    snoop = d["x"] == 1
+    ra_tid = jnp.where(snoop, d["ext_a"] * N_SP + lane, tid)
+    rb_tid = jnp.where(snoop, d["ext_b"] * N_SP + lane, tid)
+    op, typ = d["opcode"], d["typ"]
+    is_fp = typ == int(isa.Typ.FP32)
+
+    def col(regs, rd):
+        return jnp.take(regs, rd, axis=2)     # (n_sms, 512)
+
+    def set_col(regs, rd, vals):
+        return regs.at[:, :, rd].set(vals)
+
+    def write_active(regs, rd, vals, mask):
+        return set_col(regs, rd, jnp.where(mask, vals, col(regs, rd)))
+
+    def operands(regs):
+        a_u = regs[:, ra_tid, d["ra"]]        # (n_sms, 512)
+        b_u = regs[:, rb_tid, d["rb"]]
+        return a_u, b_u
+
+    def addr_of(regs):
+        a_u, _ = operands(regs)
+        return jax.lax.bitcast_convert_type(a_u, _I32) + d["imm"]
+
+    def h_identity(s):
+        return s
+
+    def h_alu(s):
+        regs, shmem, gmem, oob = s
+        a_u, b_u = operands(regs)
+        old = col(regs, d["rd"])
+        mask = jnp.broadcast_to(active, old.shape)
+        res = backend.alu(op, typ, a_u, b_u, mask, old)
+        return set_col(regs, d["rd"], res), shmem, gmem, oob
+
+    def h_lod(s):
+        regs, shmem, gmem, oob = s
+        depth = shmem.shape[1]
+        addr = addr_of(regs)
+        bad = active & ((addr < 0) | (addr >= depth))
+        safe = jnp.clip(addr, 0, depth - 1)
+        old = col(regs, d["rd"])
+        mask = active & ~bad
+        vals = backend.lod(shmem, safe, mask, old)
+        return (set_col(regs, d["rd"], vals), shmem, gmem,
+                oob | bad.any(axis=1))
+
+    def h_sto(s):
+        regs, shmem, gmem, oob = s
+        depth = shmem.shape[1]
+        addr = addr_of(regs)
+        bad = active & ((addr < 0) | (addr >= depth))
+        vals = col(regs, d["rd"])
+        shmem = backend.sto(shmem, addr, vals, active & ~bad)
+        return regs, shmem, gmem, oob | bad.any(axis=1)
+
+    def h_lodi(s):
+        regs, shmem, gmem, oob = s
+        as_f = jax.lax.bitcast_convert_type(d["imm"].astype(_F32), _U32)
+        val = jnp.where(is_fp, as_f, d["imm"].astype(_U32))
+        vals = jnp.broadcast_to(val, (regs.shape[0], MAX_THREADS))
+        return (write_active(regs, d["rd"], vals, active), shmem, gmem, oob)
+
+    def h_td(s):
+        regs, shmem, gmem, oob = s
+        n_sms = regs.shape[0]
+        x = (tid % cfg.dim_x).astype(_U32)[None]            # (1, 512)
+        y = (tid // cfg.dim_x).astype(_U32)[None]
+        bid = jnp.broadcast_to(block_idx.astype(_U32)[:, None],
+                               (n_sms, MAX_THREADS))
+        pid = jnp.broadcast_to(prog_idx.astype(_U32)[:, None],
+                               (n_sms, MAX_THREADS))
+        vals = jnp.where(op == int(Op.TDX), x,
+                         jnp.where(op == int(Op.TDY), y,
+                                   jnp.where(op == int(Op.BID), bid, pid)))
+        return (write_active(regs, d["rd"], vals, active), shmem, gmem, oob)
+
+    def h_red(s):
+        # DOT/SUM: reduce each active wavefront across its active lanes,
+        # write the result to lane 0 of that wavefront (the first SP).
+        regs, shmem, gmem, oob = s
+        n_sms = regs.shape[0]
+        a_u, b_u = operands(regs)
+        lane_active = active.reshape(MAX_WAVES, N_SP)
+        a2 = jax.lax.bitcast_convert_type(a_u, _F32) \
+            .reshape(n_sms, MAX_WAVES, N_SP)
+        b2 = jax.lax.bitcast_convert_type(b_u, _F32) \
+            .reshape(n_sms, MAX_WAVES, N_SP)
+        prod = jnp.where(op == int(Op.DOT), a2 * b2, a2 + b2)
+        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
+        wave_active = lane_active.any(axis=1)               # (waves,)
+        dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP     # lane 0 per wave
+        cur = regs[:, dest, d["rd"]]                        # (n_sms, waves)
+        new = jnp.where(wave_active[None],
+                        jax.lax.bitcast_convert_type(red, _U32), cur)
+        return regs.at[:, dest, d["rd"]].set(new), shmem, gmem, oob
+
+    def h_sfu(s):
+        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source)
+        regs, shmem, gmem, oob = s
+        src_tid = jnp.where(snoop, d["ext_a"] * N_SP, 0)
+        val = jax.lax.bitcast_convert_type(
+            regs[:, src_tid, d["ra"]], _F32)                # (n_sms,)
+        r = jax.lax.rsqrt(val)
+        return (regs.at[:, 0, d["rd"]].set(
+            jax.lax.bitcast_convert_type(r, _U32)), shmem, gmem, oob)
+
+    def h_gld(s):
+        regs, shmem, gmem, oob = s
+        gdepth = gmem.shape[0]
+        addr = addr_of(regs)
+        bad = active & ((addr < 0) | (addr >= gdepth))
+        safe = jnp.clip(addr, 0, gdepth - 1)
+        old = col(regs, d["rd"])
+        mask = active & ~bad
+        vals = backend.gld(gmem, safe, mask, old)
+        return (set_col(regs, d["rd"], vals), shmem, gmem,
+                oob | bad.any(axis=1))
+
+    def h_gst(s):
+        regs, shmem, gmem, oob = s
+        gdepth = gmem.shape[0]
+        addr = addr_of(regs)
+        bad = active & ((addr < 0) | (addr >= gdepth))
+        vals = col(regs, d["rd"])
+        # the single device-wide port drains in (sm, thread) order
+        gmem = backend.gst(gmem, addr, vals, active & ~bad)
+        return regs, shmem, gmem, oob | bad.any(axis=1)
+
+    return [h_identity, h_alu, h_lod, h_sto, h_lodi, h_td, h_red, h_sfu,
+            h_gld, h_gst]
 
 
 # ---------------------------------------------------------------------------

@@ -36,7 +36,9 @@ def mixed_device(n_fft: int, n_sms: int = 4,
 def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
                    device: DeviceConfig | None = None,
                    schedule: str | None = None, backend: str | None = None,
-                   interleave: bool = True
+                   interleave: bool = True,
+                   priorities: tuple[int, int] | None = None,
+                   engine: str | None = None
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                               LaunchResult]:
     """Run ``xs`` (batch_f, n) complex FFTs and ``As`` (batch_q, 16, 16)
@@ -44,7 +46,11 @@ def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
 
     ``interleave=True`` round-robins the two programs' blocks in the
     dispatch order (the imbalanced-grid case dynamic scheduling exists
-    for); ``False`` queues all FFT blocks first.
+    for); ``False`` queues all FFT blocks first. ``priorities`` sets the
+    (fft, qrd) ``Kernel.priority`` pair for the dynamic dispatch queue —
+    e.g. ``(0, 1)`` drains the long QRD blocks first so they don't
+    straggle behind a queue of short FFTs. ``engine`` forwards to
+    ``launch`` ("step" | "trace" | None for the device default).
     """
     xs, As = np.asarray(xs), np.asarray(As)
     batch_f, n = int(xs.shape[0]), int(xs.shape[1])
@@ -64,9 +70,15 @@ def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
                 grid_map.append(1)
     else:
         grid_map = [0] * batch_f + [1] * batch_q
-    res = launch(device, programs=[fft_kernel(n), qrd_kernel()],
+    kernels = [fft_kernel(n), qrd_kernel()]
+    if priorities is not None:
+        import dataclasses
+
+        kernels = [dataclasses.replace(k, priority=p)
+                   for k, p in zip(kernels, priorities)]
+    res = launch(device, programs=kernels,
                  grid_map=grid_map, shmem=[fft_images, qrd_images],
-                 backend=backend, schedule=schedule)
+                 backend=backend, schedule=schedule, engine=engine)
 
     # unpack per-program results: blocks are in grid_map order; program-
     # local order is preserved within it

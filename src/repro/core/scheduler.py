@@ -17,7 +17,8 @@ data-dependent control flow):
 
 ``dynamic``
     Work-queue dispatch with per-SM sequencers. Blocks are queued in grid
-    order; an SM pulls the head block when idle, executes its trace, and
+    order (or by descending ``Kernel.priority``, FIFO within a priority
+    level); an SM pulls the head block when idle, executes its trace, and
     only stalls when the single device-wide global-memory port is busy.
     Port arbitration is FIFO by request time (ties broken by SM index), so
     the simulation is deterministic. Port queueing appears as per-SM
@@ -36,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from collections import deque
 from typing import Sequence
 
 import numpy as np
@@ -104,7 +104,8 @@ class Schedule:
 
 def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
                     mode: str,
-                    phase_of: Sequence[int] | None = None) -> Schedule:
+                    phase_of: Sequence[int] | None = None,
+                    priority_of: Sequence[int] | None = None) -> Schedule:
     """Schedule ``traces[b]`` (one per block, in grid order) onto ``n_sms``
     SMs under the given discipline.
 
@@ -113,15 +114,31 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     a device-wide barrier between phases (the CUDA-stream semantic for
     dependent kernels, e.g. a two-level reduction fused into one launch).
     Within a phase, blocks keep their grid order. Default: one phase.
+
+    ``priority_of[b]`` orders the DYNAMIC ready queue within a phase: an
+    idle SM pulls the highest-priority ready block; ties keep FIFO grid
+    order, so all-equal priorities (the default) reproduce the plain FIFO
+    schedule exactly. The static wave schedule ignores priority — waves
+    are grid order by definition.
     """
     if mode not in SCHEDULES:
         raise ValueError(f"schedule mode {mode!r} not in {SCHEDULES}")
     if n_sms < 1:
         raise ValueError(f"n_sms={n_sms} must be >= 1")
-    sim = _schedule_static if mode == "static" else _schedule_dynamic
     n_blocks = len(traces)
+    if priority_of is None:
+        prio = np.zeros(n_blocks, np.int64)
+    else:
+        prio = np.asarray(list(priority_of), np.int64)
+        if prio.shape != (n_blocks,):
+            raise ValueError(f"priority_of has shape {prio.shape}, want "
+                             f"({n_blocks},)")
+    if mode == "static":
+        sim = lambda tr, n, _p: _schedule_static(tr, n)  # noqa: E731
+    else:
+        sim = _schedule_dynamic
     if phase_of is None:
-        return sim(traces, n_sms)
+        return sim(traces, n_sms, prio)
     phase = np.asarray(list(phase_of), np.int64)
     if phase.shape != (n_blocks,):
         raise ValueError(f"phase_of has shape {phase.shape}, want "
@@ -136,7 +153,7 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     waves: list[int] = []
     t0 = 0
     for idx in parts:
-        s = sim([traces[i] for i in idx], n_sms)
+        s = sim([traces[i] for i in idx], n_sms, prio[idx])
         sm[idx] = s.block_sm
         start[idx] = s.block_start + t0
         finish[idx] = s.block_finish + t0
@@ -204,7 +221,8 @@ def _segments(trace: ProgramTrace) -> list[tuple[int, int]]:
 _PULL, _PORT = 0, 1
 
 
-def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
+def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int,
+                      priority: np.ndarray | None = None) -> Schedule:
     n_blocks = len(traces)
     sm = np.zeros(n_blocks, np.int64)
     start = np.zeros(n_blocks, np.int64)
@@ -212,7 +230,13 @@ def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
     busy = np.asarray([t.cycles for t in traces], np.int64)
     wait = np.zeros(n_blocks, np.int64)
 
-    queue = deque(range(n_blocks))
+    if priority is None:
+        priority = np.zeros(n_blocks, np.int64)
+    # ready queue ordered by (priority desc, grid order): with all-equal
+    # priorities this pops in grid order — exactly the old FIFO deque
+    queue: list[tuple[int, int]] = [(-int(priority[b]), b)
+                                    for b in range(n_blocks)]
+    heapq.heapify(queue)
     segs_of = [_segments(t) for t in traces]
     # per-SM cursor: current block, its segments, next segment index
     cur_block = [-1] * n_sms
@@ -242,7 +266,7 @@ def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
         if kind[s] == _PULL:
             if not queue:
                 continue                      # SM retires: queue drained
-            b = queue.popleft()
+            _, b = heapq.heappop(queue)
             cur_block[s] = b
             cur_segs[s] = segs_of[b]
             cur_i[s] = 0

@@ -1,0 +1,208 @@
+"""Trace-compiled execution engine: decode-once ``lax.scan`` pipelines.
+
+The eGPU ISA has no data-dependent control flow — the sequence of
+instructions a block issues is a *static* property of the program
+(``cycles.program_trace``, exact). The stepping machine in ``device.py``
+nevertheless re-fetches the 40-bit I-word, re-extracts every field, and
+re-dispatches the handler switch on every ``lax.while_loop`` iteration,
+and spends iterations on NOPs (hazard padding) and control flow that have
+no architectural data effect. Following the soft-GPGPU compilation
+argument (arXiv 2406.03227: close the gap to hand-built pipelines by
+compiling the schedule ahead of time; arXiv 2401.04261: hoist dispatch
+work off the per-cycle path), this module lowers a program ONCE into a
+pre-decoded structure-of-arrays instruction schedule and executes it as a
+single jitted ``lax.scan`` over the ``(n_sms, 512)`` lockstep batch:
+
+  * decode happens at trace time, on the host: every issued instruction's
+    fields (opcode, registers, immediates, snoop extensions, flexible-ISA
+    active shape, handler id) become one row of the schedule;
+  * control flow and NOPs vanish from the executed pipeline — their
+    sequencer effects are pre-resolved by the trace walk, and their cycle
+    costs are a static property already carried by ``ProgramTrace``;
+  * the scan body dispatches straight into the shared execute stage
+    (``executor.make_data_handlers``), the SAME handler graph the stepping
+    machine uses, so the two engines are bit-identical by construction —
+    on every backend ("inline" jnp and the "pallas" kernel path alike);
+  * one compiled artifact exists per ``(program, SMConfig)``: schedules
+    are held in a keyed cache (device-resident arrays, so repeated
+    launches skip the host decode AND the host->device transfer), and
+    XLA's jit cache keys the compiled scan on (config, backend, shapes).
+
+``device.launch(..., engine="trace")`` routes every functional wave here
+while the scheduler/timing layer is fed unchanged — cycle counters come
+from the static trace (``trace.static_cycles`` / ``cycles_by_class``),
+which the golden-cycle suite pins bit-equal to the stepping machine's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cycles import ProgramTrace, program_trace
+from .executor import (
+    DATA_SEL_OF_OP,
+    _decode,
+    get_execute_backend,
+    make_data_handlers,
+)
+from .machine import MAX_THREADS, N_SP, SMConfig
+
+_I32 = jnp.int32
+
+ENGINES = ("step", "trace")
+
+# decoded-field columns of the structure-of-arrays schedule, in the order
+# they are packed into the (n_steps, len(_FIELDS)) i32 matrix
+_FIELDS = ("sel", "opcode", "typ", "rd", "ra", "rb", "imm", "x",
+           "ext_a", "ext_b", "act_waves", "act_wthreads")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSchedule:
+    """One program lowered to a pre-decoded instruction schedule.
+
+    ``xs[f]`` is the (n_steps,) i32 column for decoded field ``f`` — one
+    row per *data* instruction of the issued trace (NOP/control rows are
+    compiled out). ``trace`` keeps the full issued trace for timing;
+    ``by_class_base``/``by_class_gmem`` pre-reduce its per-class cycle
+    totals so per-wave counters are O(classes), not O(steps).
+    """
+
+    cfg: SMConfig
+    trace: ProgramTrace
+    xs: dict[str, jax.Array]
+    by_class_base: np.ndarray       # (NUM_CLASSES,) trace.cycles_by_class(1)
+    by_class_gmem: np.ndarray       # (NUM_CLASSES,) gmem-only cycle rows
+
+    @property
+    def n_steps(self) -> int:
+        """Data instructions executed per block (decode-free scan length)."""
+        return int(self.xs["sel"].shape[0])
+
+    @property
+    def halted(self) -> bool:
+        return self.trace.halted
+
+    def cycles_by_class(self, wave_n: int) -> np.ndarray:
+        """== ``trace.cycles_by_class(wave_n)`` (GMEM scaled by the wave
+        width), from the precomputed reductions."""
+        return self.by_class_base + (wave_n - 1) * self.by_class_gmem
+
+
+def _decode_words(words: np.ndarray) -> dict[str, np.ndarray]:
+    """Decode an array of 40-bit I-words at lowering time, through the
+    SAME ``executor._decode`` the stepping machine runs per step — one
+    bit-layout definition, so the engines cannot drift (the trace engine
+    must see exactly the stepping machine's fields, including the
+    signed-immediate view of snoop extension bits)."""
+    w = np.asarray(words, np.int64)
+    lo = jnp.asarray(w & 0xFFFFFFFF, jnp.uint32)
+    hi = jnp.asarray((w >> 32) & 0xFF, jnp.uint32)
+    return {k: np.asarray(v) for k, v in _decode(lo, hi).items()}
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_cached(words_key: tuple, cfg: SMConfig) -> TraceSchedule:
+    trace = program_trace(np.asarray(words_key, np.int64), cfg.n_threads,
+                          imem_depth=cfg.imem_depth,
+                          max_steps=cfg.max_steps)
+    # data steps only: rows whose handler has an architectural data effect
+    sel_of = DATA_SEL_OF_OP
+    pcs = np.asarray([t.pc for t in trace.instrs
+                      if sel_of[int(t.op)] != 0], np.int64)
+    # every data pc addresses a real program word (STOP padding is control)
+    assert pcs.size == 0 or pcs.max() < len(words_key), \
+        "data instruction issued from STOP-padded I-MEM"
+    words = np.asarray(words_key, np.int64)[pcs] if pcs.size \
+        else np.zeros((0,), np.int64)
+    d = _decode_words(words)
+    n_waves = cfg.n_waves
+    depth_table = np.array(
+        [n_waves, max(1, n_waves // 2), max(1, n_waves // 4), 1], np.int64)
+    width_table = np.array([16, 8, 4, 1], np.int64)
+    cols = dict(
+        sel=sel_of[d["opcode"]],
+        opcode=d["opcode"], typ=d["typ"],
+        rd=d["rd"], ra=d["ra"], rb=d["rb"],
+        imm=d["imm"], x=d["x"], ext_a=d["ext_a"], ext_b=d["ext_b"],
+        act_waves=depth_table[d["depth"]],
+        act_wthreads=width_table[d["width"]],
+    )
+    xs = {f: jnp.asarray(np.asarray(cols[f], np.int32)) for f in _FIELDS}
+    from .isa import NUM_CLASSES
+
+    by_base = np.asarray(trace.cycles_by_class(1), np.int64)
+    by_gmem = np.zeros((NUM_CLASSES,), np.int64)
+    for t in trace.instrs:
+        if t.gmem:
+            by_gmem[t.klass] += t.cycles
+    return TraceSchedule(cfg=cfg, trace=trace, xs=xs,
+                         by_class_base=by_base, by_class_gmem=by_gmem)
+
+
+def compile_program(program, cfg: SMConfig) -> TraceSchedule:
+    """Lower ``program`` (a Program or encoded word array) for ``cfg``.
+
+    Idempotent and cached: the keyed compile cache holds one schedule per
+    ``(program words, SMConfig)``; XLA's jit cache then holds one compiled
+    scan per (SMConfig, backend, batch shape).
+    """
+    words = program.words if hasattr(program, "words") else program
+    key = tuple(int(w) for w in words)
+    return _compile_cached(key, cfg)
+
+
+def compile_cache_info():
+    return _compile_cached.cache_info()
+
+
+def compile_cache_clear() -> None:
+    _compile_cached.cache_clear()
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_schedule(cfg: SMConfig, backend_name: str, xs, block_idx,
+                  prog_idx, regs, shmem, gmem, oob):
+    """Execute a pre-decoded schedule: ONE fixed-length scan, no decode,
+    no dynamic pc, no halt test — dispatch is a 10-way switch on the
+    precompiled handler id into the shared execute stage."""
+    backend = get_execute_backend(backend_name)
+    tid = jnp.arange(MAX_THREADS, dtype=_I32)
+    lane = tid % N_SP
+    wave = tid // N_SP
+
+    def step(carry, x):
+        active = (lane < x["act_wthreads"]) & (wave < x["act_waves"]) \
+            & (tid < cfg.n_threads)
+        handlers = make_data_handlers(cfg, backend, x, active, block_idx,
+                                      prog_idx)
+        return jax.lax.switch(x["sel"], handlers, carry), None
+
+    carry, _ = jax.lax.scan(step, (regs, shmem, gmem, oob), xs)
+    return carry
+
+
+def run_wave_trace(cfg: SMConfig, backend: str, sched: TraceSchedule,
+                   block_idx, prog_idx, state):
+    """Trace-engine replacement for ``device.run_wave``: same DeviceState
+    in/out contract, counters synthesized from the static trace (identical
+    to the stepping machine's — the lockstep wave rule charges each member
+    for the whole wave's port drain, ``trace.static_cycles``)."""
+    n = state.regs.shape[0]
+    regs, shmem, gmem, oob = _run_schedule(
+        cfg, backend, sched.xs, jnp.asarray(block_idx, _I32),
+        jnp.asarray(prog_idx, _I32), state.regs, state.shmem, state.gmem,
+        state.oob)
+    tr = sched.trace
+    return state.replace(
+        regs=regs, shmem=shmem, gmem=gmem, oob=oob,
+        halted=state.halted | jnp.asarray(tr.halted),
+        steps=state.steps + jnp.int32(tr.steps),
+        cycles=state.cycles + jnp.int32(tr.static_cycles(n)),
+        cycles_by_class=state.cycles_by_class
+        + jnp.asarray(sched.cycles_by_class(n), _I32),
+    )

@@ -1,0 +1,169 @@
+"""Pallas TPU kernels: the eGPU execute stage beyond the ALU.
+
+``simt_alu`` (kept in ``simt_alu.py``, re-exported here) covers the SP
+array's arithmetic path; this module extends the Pallas backend seam over
+the *memory* half of the execute stage, so a trace-engine or step-machine
+instruction runs its whole data path through Pallas:
+
+  * ``simt_gather``         — LOD: the quad-read-port shared-memory gather,
+    one SM's ``(depth,)`` image indexed by its 512 lanes;
+  * ``simt_scatter``        — STO: the single-write-port scatter; writeback
+    is sequential in thread order, so the LAST active thread wins on
+    address collisions (reproduced with a commutative scatter-max, exactly
+    the inline backend's trick — bit-identical by construction);
+  * ``simt_gather_shared``  — GLD: every SM's lanes gather from the ONE
+    device-wide global-memory segment;
+  * ``simt_scatter_shared`` — GST: the single device-wide port drains in
+    (sm, thread) order; last (sm, thread) writer wins.
+
+TPU adaptation notes: lane-indexed gathers map to VMEM dynamic gathers
+(``jnp.take_along_axis`` on an in-register tile); the scatters express the
+port-serialization semantics as a max-reduction over writer order followed
+by a masked store, which keeps them associative/commutative and therefore
+safe on the VPU. Like the ALU kernel these are validated bit-exact against
+the inline jnp backend via the Pallas interpreter on CPU and TARGET real
+TPU lowering for the compiled path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .simt_alu import N_THREADS, simt_alu  # noqa: F401  (re-export)
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# LOD: per-SM shared-memory gather (quad read port)
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(mem_ref, addr_ref, mask_ref, old_ref, out_ref):
+    mem = mem_ref[...]                       # (block_sm, depth)
+    addr = addr_ref[...]                     # (block_sm, 512)
+    vals = jnp.take_along_axis(mem, addr, axis=1)
+    out_ref[...] = jnp.where(mask_ref[...] != 0, vals, old_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simt_gather(mem: jax.Array, addr: jax.Array, mask: jax.Array,
+                old: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """LOD gather: ``out[s, t] = mem[s, addr[s, t]]`` where masked.
+
+    ``mem`` is the (n_sm, depth) shared-memory batch, ``addr`` pre-clipped
+    lane addresses, ``old`` the destination column inactive lanes keep.
+    One SM per grid step: a 3K-word image is 12 KiB of VMEM plus three
+    2 KiB lane tiles — far inside a core's VMEM.
+    """
+    n_sm, depth = mem.shape
+    lane_spec = pl.BlockSpec((1, N_THREADS), lambda i: (i, 0))
+    return pl.pallas_call(
+        _gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_sm, N_THREADS), _U32),
+        grid=(n_sm,),
+        in_specs=[pl.BlockSpec((1, depth), lambda i: (i, 0)),
+                  lane_spec, lane_spec, lane_spec],
+        out_specs=lane_spec,
+        interpret=interpret,
+    )(mem, addr.astype(_I32), mask.astype(_U32), old)
+
+
+# ---------------------------------------------------------------------------
+# STO: per-SM shared-memory scatter (single write port, last thread wins)
+# ---------------------------------------------------------------------------
+
+def _scatter_kernel(mem_ref, addr_ref, vals_ref, do_ref, out_ref):
+    depth = mem_ref.shape[1]
+    addr = addr_ref[0]                       # (512,)
+    do = do_ref[0] != 0
+    order = jax.lax.iota(_I32, addr.shape[0])
+    slot = jnp.where(do, addr, depth)        # park masked writes
+    winner = jnp.full((depth + 1,), -1, _I32).at[slot].max(order)
+    write = do & (winner[slot] == order)
+    mem = mem_ref[0]
+    out_ref[0, :] = mem.at[jnp.where(write, addr, depth)].set(
+        vals_ref[0], mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simt_scatter(mem: jax.Array, addr: jax.Array, vals: jax.Array,
+                 do: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """STO scatter: serialized single-port writeback in thread order.
+
+    Among enabled writers to one address the highest thread wins; masked
+    and out-of-range lanes write nothing (the caller pre-masks ``do``).
+    """
+    n_sm, depth = mem.shape
+    lane_spec = pl.BlockSpec((1, N_THREADS), lambda i: (i, 0))
+    mem_spec = pl.BlockSpec((1, depth), lambda i: (i, 0))
+    return pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_sm, depth), _U32),
+        grid=(n_sm,),
+        in_specs=[mem_spec, lane_spec, lane_spec, lane_spec],
+        out_specs=mem_spec,
+        interpret=interpret,
+    )(mem, addr.astype(_I32), vals, do.astype(_U32))
+
+
+# ---------------------------------------------------------------------------
+# GLD/GST: the device-wide global-memory port
+# ---------------------------------------------------------------------------
+
+def _gather_shared_kernel(mem_ref, addr_ref, mask_ref, old_ref, out_ref):
+    mem = mem_ref[...]                       # (gdepth,)
+    vals = mem[addr_ref[...]]                # (block_sm, 512) gather
+    out_ref[...] = jnp.where(mask_ref[...] != 0, vals, old_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simt_gather_shared(mem: jax.Array, addr: jax.Array, mask: jax.Array,
+                       old: jax.Array, *, interpret: bool = True
+                       ) -> jax.Array:
+    """GLD gather: every SM's lanes read the one global segment."""
+    (gdepth,) = mem.shape
+    n_sm = addr.shape[0]
+    lane_spec = pl.BlockSpec((1, N_THREADS), lambda i: (i, 0))
+    return pl.pallas_call(
+        _gather_shared_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_sm, N_THREADS), _U32),
+        grid=(n_sm,),
+        in_specs=[pl.BlockSpec((gdepth,), lambda i: (0,)),
+                  lane_spec, lane_spec, lane_spec],
+        out_specs=lane_spec,
+        interpret=interpret,
+    )(mem, addr.astype(_I32), mask.astype(_U32), old)
+
+
+def _scatter_shared_kernel(mem_ref, addr_ref, vals_ref, do_ref, out_ref):
+    depth = mem_ref.shape[0]
+    addr = addr_ref[...]                     # (n_sm * 512,) flattened
+    do = do_ref[...] != 0
+    order = jax.lax.iota(_I32, addr.shape[0])    # (sm, thread) drain order
+    slot = jnp.where(do, addr, depth)
+    winner = jnp.full((depth + 1,), -1, _I32).at[slot].max(order)
+    write = do & (winner[slot] == order)
+    out_ref[...] = mem_ref[...].at[jnp.where(write, addr, depth)].set(
+        vals_ref[...], mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def simt_scatter_shared(mem: jax.Array, addr: jax.Array, vals: jax.Array,
+                        do: jax.Array, *, interpret: bool = True
+                        ) -> jax.Array:
+    """GST scatter: one port for the whole sector, (sm, thread) order."""
+    (gdepth,) = mem.shape
+    flat = pl.BlockSpec((addr.size,), lambda: (0,))
+    mem_spec = pl.BlockSpec((gdepth,), lambda: (0,))
+    return pl.pallas_call(
+        _scatter_shared_kernel,
+        out_shape=jax.ShapeDtypeStruct((gdepth,), _U32),
+        in_specs=[mem_spec, flat, flat, flat],
+        out_specs=mem_spec,
+        interpret=interpret,
+    )(mem, addr.reshape(-1).astype(_I32), vals.reshape(-1),
+      do.reshape(-1).astype(_U32))

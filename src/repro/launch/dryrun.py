@@ -165,6 +165,22 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
     return cfg, shape, mesh, jitted, args
 
 
+def _peak_bytes(mem) -> int:
+    """Per-device peak memory from ``compiled.memory_analysis()``.
+
+    Some jaxlibs expose ``peak_memory_in_bytes`` directly; others —
+    including the 0.4.37 pinned here — only carry the component sizes on
+    ``CompiledMemoryStats``, so fall back to the resident-set bound
+    arguments + outputs + temporaries - aliased (aliased output bytes
+    reuse argument storage).
+    """
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return int(peak)
+
+
 def _compile_costs(arch_name, shape_name, multi_pod, cfg=None, mesh=None,
                    hlo_dir=None, tag=None, policy="baseline"):
     t0 = time.perf_counter()
@@ -178,6 +194,11 @@ def _compile_costs(arch_name, shape_name, multi_pod, cfg=None, mesh=None,
         t_compile = time.perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # some jax versions (e.g. 0.4.37, the one pinned here) return a
+    # one-element list of dicts per executable; others return the dict
+    # directly — normalize both shapes
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     if hlo_dir and tag:
         os.makedirs(hlo_dir, exist_ok=True)
@@ -192,7 +213,7 @@ def _compile_costs(arch_name, shape_name, multi_pod, cfg=None, mesh=None,
         "argument_bytes_per_device": int(mem.argument_size_in_bytes),
         "output_bytes_per_device": int(mem.output_size_in_bytes),
         "temp_bytes_total": int(mem.temp_size_in_bytes),
-        "peak_bytes_per_device": int(mem.peak_memory_in_bytes),
+        "peak_bytes_per_device": int(_peak_bytes(mem)),
         "mesh_obj": mesh,
     }
 

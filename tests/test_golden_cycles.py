@@ -75,12 +75,14 @@ def _qrd_batch(n_sms):
     return res
 
 
-def _mixed(schedule):
+def _mixed(schedule, priorities=None, interleave=True):
     from repro.core.programs import launch_fft_qrd
 
     xs = np.ones((6, 64), np.complex64)
     As = np.stack([np.eye(16, dtype=np.float32)] * 3)
-    _, _, _, res = launch_fft_qrd(xs, As, schedule=schedule)
+    _, _, _, res = launch_fft_qrd(xs, As, schedule=schedule,
+                                  priorities=priorities,
+                                  interleave=interleave)
     return res
 
 
@@ -92,6 +94,13 @@ for _n in (1, 2, 4):
     CASES[f"qrd16_batch5[{_n}sm]"] = (lambda n=_n: _qrd_batch(n))
 CASES["mixed_fft_qrd[4sm,dynamic]"] = lambda: _mixed("dynamic")
 CASES["mixed_fft_qrd[4sm,static]"] = lambda: _mixed("static")
+# priority discipline: all FFT blocks queue FIRST (interleave=False, the
+# worst case for FIFO), and Kernel(priority=1) pulls the long QRD blocks
+# ahead of them — the prioritized makespan must beat the FIFO one
+CASES["mixed_fft_qrd[4sm,dynamic,fifo-backloaded]"] = \
+    lambda: _mixed("dynamic", interleave=False)
+CASES["mixed_fft_qrd[4sm,dynamic,qrd-first]"] = \
+    lambda: _mixed("dynamic", priorities=(0, 1), interleave=False)
 
 
 @pytest.fixture(scope="module")

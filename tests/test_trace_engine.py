@@ -1,0 +1,339 @@
+"""Trace-engine differential suite: the decode-once scan pipeline must be
+bit-identical to the stepping machine on every golden program, at every SM
+count, on both execute backends — plus the engine plumbing (auto
+selection, compile cache), the per-Kernel imem/shmem overrides, and the
+priority dispatch discipline that ride along in this layer.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DeviceConfig,
+    Kernel,
+    SMConfig,
+    assemble,
+    compile_program,
+    launch,
+    program_trace,
+    schedule_blocks,
+)
+from repro.core.assembler import auto_nop
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+
+RNG = np.random.default_rng(23)
+
+
+def _dcfg(n_sms=4, gdepth=256, engine="auto", backend="inline", **sm_kw):
+    sm_kw.setdefault("max_steps", 5000)
+    return DeviceConfig(n_sms=n_sms, global_mem_depth=gdepth,
+                        engine=engine, backend=backend, sm=SMConfig(**sm_kw))
+
+
+def _assert_launches_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+    np.testing.assert_array_equal(np.asarray(a.shmem), np.asarray(b.shmem))
+    np.testing.assert_array_equal(np.asarray(a.gmem), np.asarray(b.gmem))
+    np.testing.assert_array_equal(np.asarray(a.oob), np.asarray(b.oob))
+    assert a.halted == b.halted
+    assert a.cycles == b.cycles and a.steps == b.steps
+    assert list(a.wave_cycles) == list(b.wave_cycles)
+    assert list(np.asarray(a.cycles_by_class)) \
+        == list(np.asarray(b.cycles_by_class))
+    assert a.static_cycles == b.static_cycles
+
+
+# ---------------------------------------------------------------------------
+# golden programs: step vs trace across SM counts and backends
+# ---------------------------------------------------------------------------
+
+def _golden_launches(n_sms, backend, engine):
+    """One launch per golden program on an ``n_sms`` device; returns
+    {name: LaunchResult}. Sizes kept small enough for the Pallas
+    interpreter to sweep the whole set."""
+    from repro.core.programs import launch_fft_qrd, launch_reduction
+    from repro.core.programs.fft import run_fft_batch
+    from repro.core.programs.qrd import run_qrd_batch
+    from repro.core.programs.saxpy import launch_saxpy
+
+    out = {}
+    x = np.arange(64, dtype=np.float32)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=1024, engine=engine,
+                       backend=backend, sm=SMConfig(max_steps=10_000))
+    _, out["saxpy"] = launch_saxpy(2.0, x, np.ones_like(x), device=dev,
+                                   block=16)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=2048, engine=engine,
+                       backend=backend, sm=SMConfig(max_steps=50_000))
+    _, out["reduction"] = launch_reduction(np.ones(512, np.float32),
+                                           device=dev, block=128,
+                                           fused=True)
+    dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       sm=SMConfig(shmem_depth=192, max_steps=200_000))
+    _, out["fft"] = run_fft_batch(np.ones((3, 64), np.complex64),
+                                  device=dev)
+    dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       sm=SMConfig(shmem_depth=1024, imem_depth=1024,
+                                   max_steps=200_000))
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * i
+                   for i in range(2)])
+    _, _, out["qrd"] = run_qrd_batch(As, device=dev)
+    from repro.core.programs.mixed import mixed_device
+
+    dev = dataclasses.replace(mixed_device(64, n_sms=n_sms), engine=engine,
+                              backend=backend)
+    _, _, _, out["mixed"] = launch_fft_qrd(
+        np.ones((3, 64), np.complex64),
+        np.stack([np.eye(16, dtype=np.float32)] * 2), device=dev)
+    return out
+
+
+@pytest.mark.parametrize("n_sms", [1, 2, 4])
+def test_trace_engine_bit_identical_golden_inline(n_sms):
+    step = _golden_launches(n_sms, "inline", "step")
+    trace = _golden_launches(n_sms, "inline", "trace")
+    for name in step:
+        assert step[name].engine == "step"
+        assert trace[name].engine == "trace"
+        _assert_launches_identical(step[name], trace[name])
+
+
+@pytest.mark.parametrize("n_sms", [1, 2])
+def test_trace_engine_bit_identical_golden_pallas(n_sms):
+    step = _golden_launches(n_sms, "pallas", "step")
+    trace = _golden_launches(n_sms, "pallas", "trace")
+    for name in step:
+        _assert_launches_identical(step[name], trace[name])
+
+
+def test_trace_engine_bit_identical_golden_pallas_4sm():
+    # keep the 4-SM Pallas sweep to the two kernel-heavy programs so the
+    # interpreter sweep stays CI-sized; 1/2-SM cover the full set above
+    step = _golden_launches(4, "pallas", "step")
+    trace = _golden_launches(4, "pallas", "trace")
+    for name in ("fft", "qrd"):
+        _assert_launches_identical(step[name], trace[name])
+
+
+# ---------------------------------------------------------------------------
+# fuzz: random legal programs (loops, subroutines, every data op)
+# ---------------------------------------------------------------------------
+
+_DATA_OPS = [Op.ADD, Op.SUB, Op.MUL, Op.AND, Op.OR, Op.XOR, Op.LSL,
+             Op.LSR, Op.LODI, Op.TDX, Op.TDY, Op.BID, Op.PID, Op.LOD,
+             Op.STO, Op.GLD, Op.GST, Op.DOT, Op.SUM, Op.INVSQR, Op.NOP]
+
+
+def _data_instr(draw):
+    op = draw(st.sampled_from(_DATA_OPS))
+    return Instr(op=op, typ=draw(st.sampled_from(list(Typ))),
+                 rd=draw(st.integers(0, 15)), ra=draw(st.integers(0, 15)),
+                 rb=draw(st.integers(0, 15)),
+                 imm=draw(st.integers(0, 31)),
+                 width=draw(st.sampled_from(list(Width))),
+                 depth=draw(st.sampled_from(list(Depth))))
+
+
+@st.composite
+def _random_program(draw):
+    """pre | INIT t; body; LOOP | JSR sub | STOP | sub: ...; RTS —
+    terminating by construction, exercising the pre-resolved control."""
+    pre = [_data_instr(draw) for _ in range(draw(st.integers(0, 4)))]
+    body = [_data_instr(draw) for _ in range(draw(st.integers(1, 4)))]
+    trip = draw(st.integers(1, 4))
+    sub = [_data_instr(draw) for _ in range(draw(st.integers(0, 2)))]
+    use_jsr = draw(st.booleans())
+    prog = list(pre)
+    prog.append(Instr(op=Op.INIT, imm=trip))
+    body_start = len(prog)
+    prog.extend(body)
+    prog.append(Instr(op=Op.LOOP, imm=body_start))
+    stop_at = len(prog) + (1 if use_jsr else 0)
+    if use_jsr:
+        prog.append(Instr(op=Op.JSR, imm=stop_at + 1))
+    prog.append(Instr(op=Op.STOP))
+    if use_jsr:
+        prog.extend(sub)
+        prog.append(Instr(op=Op.RTS))
+    return np.array([i.encode() for i in prog], np.int64)
+
+
+@settings(max_examples=40, deadline=None)
+@given(words=_random_program(), seed=st.integers(0, 2**31 - 1),
+       n_sms=st.integers(1, 3), n_blocks=st.integers(1, 5))
+def test_fuzz_trace_engine_matches_step_machine(words, seed, n_sms,
+                                                n_blocks):
+    rng = np.random.default_rng(seed)
+    gmem = rng.standard_normal(64).astype(np.float32)
+    shmem = rng.standard_normal((n_blocks, 64)).astype(np.float32)
+    outs = {}
+    for engine in ("step", "trace"):
+        dcfg = _dcfg(n_sms=n_sms, gdepth=64, engine=engine,
+                     shmem_depth=64, max_steps=500)
+        outs[engine] = launch(dcfg, words, grid=(n_blocks,), block=32,
+                              gmem=gmem, shmem=shmem)
+    _assert_launches_identical(outs["step"], outs["trace"])
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing: auto selection, cache, runaway programs
+# ---------------------------------------------------------------------------
+
+def test_auto_engine_picks_trace_for_halting_programs():
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
+    res = launch(_dcfg(), prog, grid=(2,), block=16)
+    assert res.engine == "trace" and res.halted
+
+
+def test_auto_engine_falls_back_to_step_for_runaway_programs():
+    runaway = assemble("top:\nTDX R1\nJMP top")
+    res = launch(_dcfg(max_steps=50), runaway, grid=(1,), block=16)
+    assert res.engine == "step"
+    assert not res.halted and res.steps == 50
+
+
+def test_forced_trace_engine_matches_step_on_fuel_limited_program():
+    # fuel-limited (non-halting) traces still replay exactly
+    runaway = assemble("top:\nTDX R1\nADD.INT32 R2, R1, R1\nSTO R2, (R1)+0\nJMP top")
+    outs = {e: launch(_dcfg(max_steps=47, engine=e), runaway, grid=(3,),
+                      block=16) for e in ("step", "trace")}
+    _assert_launches_identical(outs["step"], outs["trace"])
+    assert not outs["trace"].halted
+
+
+def test_compile_cache_is_keyed_and_hit():
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
+    cfg = SMConfig(n_threads=16, dim_x=16, shmem_depth=64, max_steps=100)
+    s1 = compile_program(prog, cfg)
+    s2 = compile_program(prog.words, cfg)
+    assert s1 is s2                       # same (program, SMConfig) key
+    cfg2 = dataclasses.replace(cfg, n_threads=32, dim_x=32)
+    assert compile_program(prog, cfg2) is not s1
+    # NOP/control compiled out: only TDX + STO remain
+    assert s1.n_steps == 2 and s1.halted
+
+
+def test_bogus_engine_rejected():
+    with pytest.raises(ValueError, match="engine"):
+        DeviceConfig(engine="warp")
+    prog = assemble("STOP")
+    with pytest.raises(ValueError, match="engine"):
+        launch(_dcfg(), prog, grid=(1,), block=16, engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# per-Kernel imem/shmem overrides
+# ---------------------------------------------------------------------------
+
+def test_kernel_override_exceeding_device_ceiling_rejected():
+    prog = assemble("STOP").words
+    for field in ("imem_depth", "shmem_depth"):
+        kern = Kernel(prog, block=16, **{field: 1 << 20})
+        with pytest.raises(ValueError, match="exceeds the device ceiling"):
+            launch(_dcfg(), programs=[kern], grid_map=[0])
+        with pytest.raises(ValueError, match="must be >= 1"):
+            launch(_dcfg(), programs=[Kernel(prog, block=16, **{field: 0})],
+                   grid_map=[0])
+
+
+def test_kernel_imem_override_bounds_program_length():
+    long_prog = assemble("\n".join(["NOP"] * 40 + ["STOP"])).words
+    with pytest.raises(ValueError, match="exceeds I-MEM depth"):
+        launch(_dcfg(), programs=[Kernel(long_prog, block=16,
+                                         imem_depth=32)], grid_map=[0])
+    # fits the override: runs normally
+    res = launch(_dcfg(), programs=[Kernel(long_prog, block=16,
+                                           imem_depth=64)], grid_map=[0])
+    assert res.halted
+
+
+@pytest.mark.parametrize("engine", ["step", "trace"])
+def test_kernel_shmem_override_tightens_oob_and_pads_result(engine):
+    # thread t stores to address t: legal at the device depth (64), but
+    # threads >= 32 are out of range under a shmem_depth=32 override
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP").words
+    kerns = [Kernel(prog, block=64, name="small", shmem_depth=32),
+             Kernel(prog, block=64, name="full")]
+    res = launch(_dcfg(engine=engine, shmem_depth=64),
+                 programs=kerns, grid_map=[0, 1])
+    assert bool(np.asarray(res.oob)[0]) and not bool(np.asarray(res.oob)[1])
+    sh = np.asarray(res.shmem)
+    assert sh.shape[1] == 64              # padded back to the device depth
+    np.testing.assert_array_equal(sh[0, :32], np.arange(32))
+    np.testing.assert_array_equal(sh[0, 32:], 0)   # dropped + padding
+    np.testing.assert_array_equal(sh[1], np.arange(64))
+
+
+# ---------------------------------------------------------------------------
+# priority dispatch
+# ---------------------------------------------------------------------------
+
+def _prio_traces():
+    long_p = assemble("INIT 60\ntop:\nSTO R1, (R0)+0\nLOOP top\nSTOP").words
+    short_p = assemble("STO R1, (R0)+0\nSTOP").words
+    return (program_trace(long_p, 256), program_trace(short_p, 64))
+
+
+def test_priority_zero_is_bit_identical_to_fifo():
+    long_t, short_t = _prio_traces()
+    traces = [short_t] * 5 + [long_t] + [short_t] * 3
+    base = schedule_blocks(traces, 2, "dynamic")
+    prio = schedule_blocks(traces, 2, "dynamic",
+                           priority_of=[0] * len(traces))
+    for f in ("block_sm", "block_start", "block_finish", "block_wait"):
+        np.testing.assert_array_equal(getattr(base, f), getattr(prio, f))
+    assert base.makespan == prio.makespan
+
+
+def test_priority_pulls_high_priority_blocks_first():
+    long_t, short_t = _prio_traces()
+    # back-loaded queue: the long block sits LAST in grid order
+    traces = [short_t] * 6 + [long_t]
+    prio = [0] * 6 + [5]
+    fifo = schedule_blocks(traces, 2, "dynamic")
+    sched = schedule_blocks(traces, 2, "dynamic", priority_of=prio)
+    assert int(sched.block_start[6]) == 0     # pulled immediately
+    assert sched.makespan < fifo.makespan
+    # every block still runs exactly once
+    assert int(sched.sm_blocks.sum()) == len(traces)
+
+
+@pytest.mark.parametrize("engine", ["step", "trace"])
+def test_priority_is_timing_only(engine):
+    # functional state must be invariant to the priority discipline
+    prog = assemble(auto_nop("""
+        PID R1
+        BID R2
+        LOD R3, #16
+        MUL.INT32 R4, R1, R3
+        ADD.INT32 R5, R4, R2
+        GST R5, (R5)+0 {w1,d1}
+        STOP
+    """, 16)).words
+    gmap = [0, 0, 1, 0, 1]
+    outs = {}
+    for pri in (0, 7):
+        kerns = [Kernel(prog, block=16, name="a"),
+                 Kernel(prog, block=16, name="b", priority=pri)]
+        outs[pri] = launch(_dcfg(n_sms=2, engine=engine), programs=kerns,
+                           grid_map=gmap, schedule="dynamic")
+    np.testing.assert_array_equal(np.asarray(outs[0].gmem),
+                                  np.asarray(outs[7].gmem))
+    np.testing.assert_array_equal(np.asarray(outs[0].regs),
+                                  np.asarray(outs[7].regs))
+
+
+def test_prioritized_mixed_launch_beats_backloaded_fifo():
+    from repro.core.programs import launch_fft_qrd
+
+    xs = np.ones((6, 64), np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32)] * 3)
+    _, _, _, fifo = launch_fft_qrd(xs, As, schedule="dynamic",
+                                   interleave=False)
+    _, _, _, prio = launch_fft_qrd(xs, As, schedule="dynamic",
+                                   interleave=False, priorities=(0, 1))
+    assert prio.cycles < fifo.cycles
+    np.testing.assert_array_equal(np.asarray(fifo.shmem),
+                                  np.asarray(prio.shmem))
