@@ -9,7 +9,10 @@ Functional bit-identity of the two engines is the test suite's job
 emits ``BENCH_engine.json`` for CI to archive.
 
 The smoke set doubles as the CI regression gate: the trace engine must
-not be slower than the step machine on the FFT and QRD batch lines.
+not be slower than the step machine on the FFT and QRD batch lines, and
+must beat it by >= 1.2x on the heterogeneous FFT+QRD mixed launch — the
+merged-wave path (``trace_engine.MergedTraceSchedule``) that removed the
+last workload class excluded from the fast path.
 """
 from __future__ import annotations
 
@@ -40,15 +43,18 @@ def _lines(smoke: bool):
     from repro.core.programs.qrd import run_qrd_batch
     from repro.core.programs.saxpy import launch_saxpy
 
+    from repro.core.programs.mixed import launch_fft_qrd, mixed_device
+
     n_fft = 6 if smoke else 8
     n_qrd = 4 if smoke else 5
+    n_sms = 2 if smoke else 4
     xs = np.ones((n_fft, 64), np.complex64)
     As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * i
                    for i in range(n_qrd)])
     x = np.arange(256, dtype=np.float32)
 
     def dev(engine, **sm_kw):
-        return DeviceConfig(n_sms=2 if smoke else 4, engine=engine,
+        return DeviceConfig(n_sms=n_sms, engine=engine,
                             global_mem_depth=1024, sm=SMConfig(**sm_kw))
 
     return {
@@ -64,6 +70,12 @@ def _lines(smoke: bool):
         f"qrd16_batch{n_qrd}": lambda engine: run_qrd_batch(
             As, device=dev(engine, shmem_depth=1024, imem_depth=1024,
                            max_steps=200_000)),
+        # the heterogeneous launch (the golden mixed workload's 2:1
+        # FFT:QRD ratio): FFT and QRD blocks interleaved in one grid —
+        # the trace engine batches them as merged waves
+        f"mixed_fft{n_fft}_qrd{n_fft // 2}": lambda engine: launch_fft_qrd(
+            xs, As[:n_fft // 2], device=mixed_device(64, n_sms=n_sms),
+            engine=engine),
     }
 
 
@@ -87,15 +99,21 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         f.write("\n")
     if smoke:
         # the CI gate: decode-once execution must not lose to per-step
-        # decode on the compute-heavy lines (FFT + QRD). One re-measure
-        # before failing absorbs shared-runner scheduling jitter without
-        # weakening the bound.
+        # decode on the compute-heavy lines (FFT + QRD), and the merged
+        # heterogeneous-wave path must beat the step machine by >= 1.2x
+        # on the mixed FFT+QRD launch. One re-measure before failing
+        # absorbs shared-runner scheduling jitter without weakening the
+        # bound.
         lines = _lines(smoke)
-        gated = [n for n in results if n.startswith(("fft", "qrd"))]
-        assert gated, "smoke set lost its FFT/QRD lines"
+        floor = {n: (1.2 if n.startswith("mixed") else 1.0)
+                 for n in results if n.startswith(("fft", "qrd", "mixed"))}
+        gated = sorted(floor)
+        assert any(n.startswith("mixed") for n in gated), \
+            "smoke set lost its heterogeneous mixed line"
+        assert len(gated) >= 3, "smoke set lost its FFT/QRD lines"
         retried = False
         for n in gated:
-            if results[n]["speedup"] < 1.0:
+            if results[n]["speedup"] < floor[n]:
                 step_s = _time_launch(lambda: lines[n]("step"), repeats)
                 trace_s = _time_launch(lambda: lines[n]("trace"), repeats)
                 if step_s / trace_s > results[n]["speedup"]:
@@ -114,7 +132,7 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
                            "lines": results}, f, indent=2)
                 f.write("\n")
         for n in gated:
-            assert results[n]["speedup"] >= 1.0, (
-                f"trace engine slower than step machine on {n}: "
-                f"{results[n]}")
+            assert results[n]["speedup"] >= floor[n], (
+                f"trace engine speedup below the {floor[n]}x gate on "
+                f"{n}: {results[n]}")
     return results

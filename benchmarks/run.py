@@ -65,10 +65,16 @@ def smoke() -> None:
     assert np.allclose(X, np.fft.fft(xs, axis=1), atol=1e-4)
     assert np.allclose(np.einsum("bij,bjk->bik", Q, R), As, atol=1e-4)
     assert mres.schedule == "dynamic" and mres.cycles <= mres.static_cycles
+    # auto must take the merged heterogeneous trace path (and say so)
+    assert mres.engine == "trace", mres.profile()["engine_fallback"]
+    merge = mres.profile()["trace_merge"]
+    assert merge["n_waves"] >= 1
     print(f"smoke_mixed_launch,0.0,dynamic={mres.cycles} "
-          f"static={mres.static_cycles}")
+          f"static={mres.static_cycles} "
+          f"merge_pad={merge['pad_overhead']:.2f}")
     # step-vs-trace engine wall clock; writes BENCH_engine.json and gates
-    # CI on the trace engine not losing on the FFT/QRD lines
+    # CI on the trace engine not losing on the FFT/QRD lines and beating
+    # 1.2x on the merged heterogeneous mixed line
     engine_bench.run(smoke=True)
     print("smoke_ok,0.0,all benchmark entry points importable")
 

@@ -15,6 +15,8 @@ Public API:
     TraceSchedule, compile_program       — trace-compiled execution engine
                                            (decode-once lax.scan pipelines;
                                            launch(..., engine="trace"))
+    MergedTraceSchedule, compile_merged  — heterogeneous-wave schedules
+                                           (mixed grids as one padded scan)
     profile                              — Table III/IV-style cycle profile
     resources                            — Tables I/V + §III.E analytic model
 """
@@ -40,7 +42,13 @@ from .executor import (
     run,
     run_many,
 )
-from .trace_engine import ENGINES, TraceSchedule, compile_program
+from .trace_engine import (
+    ENGINES,
+    MergedTraceSchedule,
+    TraceSchedule,
+    compile_merged,
+    compile_program,
+)
 from .isa import CLASS_NAMES, Depth, Instr, Op, Typ, Width
 from .machine import (
     MachineState,
@@ -60,7 +68,8 @@ __all__ = [
     "DeviceConfig", "DeviceState", "Kernel", "LaunchResult", "buffer_layout",
     "launch", "pack_buffers",
     "Schedule", "schedule_blocks",
-    "ENGINES", "TraceSchedule", "compile_program",
+    "ENGINES", "MergedTraceSchedule", "TraceSchedule", "compile_merged",
+    "compile_program",
     "pack_imem", "run", "run_many",
     "ExecBackend", "execute_backends", "get_execute_backend",
     "register_backend", "register_execute_backend",

@@ -446,10 +446,12 @@ class LaunchResult:
     # scheduling (None only for results built by legacy external code)
     schedule: str = "static"            # "static" | "dynamic"
     engine: str = "step"                # "step" | "trace" functional engine
+    engine_fallback: str | None = None  # why "auto" degraded to "step"
     program_names: tuple[str, ...] = ("k0",)
     grid_map: np.ndarray | None = None  # (n_blocks,) block -> program idx
     timing: Schedule | None = None      # per-SM / per-block timeline
     static_cycles: int | None = None    # wave-schedule baseline makespan
+    trace_merge: dict[str, Any] | None = None  # heterogeneous-wave stats
 
     @property
     def n_blocks(self) -> int:
@@ -481,6 +483,11 @@ class LaunchResult:
         the per-SM busy split — the occupancy fractions are of the
         launch's total modeled cycles. ``gmem_port`` summarizes the single
         device-wide port: occupancy, queueing, and utilization.
+
+        ``engine_fallback`` is non-None exactly when ``engine="auto"``
+        degraded to the step machine (never silently); ``trace_merge``
+        appears when the trace engine batched heterogeneous waves and
+        reports the per-wave merge padding overhead.
         """
         by = np.asarray(self.cycles_by_class)
         total = int(by.sum())
@@ -489,12 +496,15 @@ class LaunchResult:
             "instructions": int(self.steps),
             "schedule": self.schedule,
             "engine": self.engine,
+            "engine_fallback": self.engine_fallback,
             "n_waves": self.n_waves,
             "wave_cycles": [int(c) for c in self.wave_cycles],
             "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
             "pct_by_class": {n: (100.0 * int(c) / total if total else 0.0)
                              for n, c in zip(isa.CLASS_NAMES, by)},
         }
+        if self.trace_merge is not None:
+            out["trace_merge"] = self.trace_merge
         t = self.timing
         if t is None:
             return out
@@ -556,17 +566,27 @@ def _kernel_shmem(sh: Any, depth: int, count: int, k: int):
 
 
 def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
-                    traces: Sequence[ProgramTrace]) -> str:
+                    traces: Sequence[ProgramTrace]
+                    ) -> tuple[str, str | None]:
+    """Resolve the functional engine; returns ``(engine, fallback)``.
+
+    ``fallback`` is non-None exactly when ``"auto"`` degraded from the
+    trace fast path to the step machine — ``"auto"`` never degrades
+    silently; the reason is surfaced as
+    ``LaunchResult.profile()["engine_fallback"]``.
+    """
     mode = engine if engine is not None else dcfg.engine
     if mode == "auto":
         # the trace engine materializes the full issued schedule; a
         # fuel-limited (non-halting) trace means a runaway program, where
         # the step machine's O(1) schedule memory is the right tool
-        return "trace" if all(t.halted for t in traces) else "step"
+        if all(t.halted for t in traces):
+            return "trace", None
+        return "step", "fuel-limited-trace"
     if mode not in trace_engine.ENGINES:
         raise ValueError(f"engine={mode!r} must be one of "
                          f"{trace_engine.ENGINES + ('auto',)}")
-    return mode
+    return mode, None
 
 
 def launch(dcfg: DeviceConfig, program=None, grid=None,
@@ -619,17 +639,25 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         each program once into a pre-decoded structure-of-arrays schedule
         and runs it as a single jitted ``lax.scan`` (no runtime decode, no
         dynamic pc, NOP/control steps compiled out — see
-        ``core.trace_engine``); "auto" (default) picks "trace" whenever
-        every program's static trace terminates, falling back to "step"
-        for runaway/fuel-limited programs. Both engines are bit-identical
-        on every backend; timing is engine-independent.
+        ``core.trace_engine``). On a heterogeneous grid the trace engine
+        MERGES the programs' schedules and packs blocks of different
+        programs into the same wave (padding to the longest participant;
+        ``profile()["trace_merge"]`` reports the overhead). "auto"
+        (default) picks "trace" whenever every program's static trace
+        terminates, falling back to "step" for runaway/fuel-limited
+        programs — never silently: ``profile()["engine_fallback"]`` names
+        the reason. Both engines are bit-identical on every backend;
+        timing is engine-independent.
 
     Timing comes from ``core.scheduler`` over the programs' static traces;
-    architectural results are computed by the exact lockstep batch machine
-    in a canonical, schedule-independent order (program-major, block
-    order), so buffers/registers/shared memory are invariant to the
+    architectural results are computed by exact lockstep batch machines.
+    The step machine runs a canonical program-major order; the trace
+    engine's merged heterogeneous waves run in grid order within each
+    barrier phase. The two coincide — and results are invariant to the
     dispatch discipline and to ``grid_map`` permutations of equal-program
-    blocks.
+    blocks — under the standard launch contract that blocks which may run
+    concurrently (same phase) do not race through global memory; use
+    ``Kernel(barrier=True)`` to fence cross-block dataflow.
     """
     # ---- normalize to kernels + grid_map --------------------------------
     if programs is not None:
@@ -704,10 +732,17 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         while name in names:
             name = f"{name}.{k}"
         names.append(name)
-    eng = _resolve_engine(engine, dcfg, traces)
-    # lower only the kernels that actually own blocks in this grid
+    eng, eng_fallback = _resolve_engine(engine, dcfg, traces)
+    present = [k for k in range(len(kernels)) if (gmap == k).any()]
+    # heterogeneous grids take the MERGED trace path: blocks of different
+    # programs share one wave, executed as a single scan over the padded
+    # merged schedule (trace_engine.MergedTraceSchedule)
+    use_merged = eng == "trace" and len(present) > 1
+    # lower only the kernels that actually own blocks in this grid (the
+    # merged path lowers through the same per-program compile cache)
     scheds = [trace_engine.compile_program(w, c)
-              if eng == "trace" and (gmap == k).any() else None
+              if eng == "trace" and not use_merged and (gmap == k).any()
+              else None
               for k, (w, c) in enumerate(zip(word_arrays, cfgs))]
 
     # ---- the schedule (timing) ------------------------------------------
@@ -736,7 +771,7 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     else:
         gm = jnp.zeros((dcfg.global_mem_depth,), _U32)
 
-    # ---- functional execution (exact lockstep batches per program) ------
+    # ---- functional execution (exact lockstep batches) -------------------
     regs_slots: list[Any] = [None] * n_blocks
     shmem_slots: list[Any] = [None] * n_blocks
     oob_slots: list[Any] = [None] * n_blocks
@@ -744,41 +779,132 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     machine_by = np.zeros((NUM_CLASSES,), np.int64)
     halted = True
     shmem_pad = dcfg.sm.shmem_depth
-    for k, kern in enumerate(kernels):
-        pos = np.flatnonzero(gmap == k)
-        if pos.size == 0:
-            continue
-        cfg, (lo, hi) = cfgs[k], imems[k]
-        sh_batch = _kernel_shmem(shmems[k], cfg.shmem_depth, pos.size, k)
-        for w0 in range(0, pos.size, dcfg.n_sms):
-            w1 = min(w0 + dcfg.n_sms, pos.size)
-            n = w1 - w0
-            st = init_device_state(
-                cfg, n, gmem_depth=dcfg.global_mem_depth,
-                shmem=None if sh_batch is None else sh_batch[w0:w1],
-                gmem=gm)
-            bidx = jnp.arange(w0, w1, dtype=_I32)   # program-local BID
-            pidx = jnp.full((n,), k, dtype=_I32)
-            if eng == "trace":
-                fin = trace_engine.run_wave_trace(cfg, backend, scheds[k],
-                                                  bidx, pidx, st)
-            else:
-                fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
-            gm = fin.gmem                   # batches run back to back
-            fin_shmem = fin.shmem
-            if cfg.shmem_depth < shmem_pad:
-                # per-Kernel shmem_depth override: pad back to the device
-                # depth so mixed launches still stack in LaunchResult
-                fin_shmem = jnp.pad(
-                    fin_shmem, ((0, 0), (0, shmem_pad - cfg.shmem_depth)))
-            for i, b in enumerate(pos[w0:w1]):
-                regs_slots[b] = fin.regs[i]
-                shmem_slots[b] = fin_shmem[i]
-                oob_slots[b] = fin.oob[i]
-            wave_cycles.append(int(fin.cycles))
-            wave_steps.append(int(fin.steps))
-            machine_by += np.asarray(fin.cycles_by_class, np.int64)
-            halted = halted and bool(fin.halted)
+    merge_stats: dict[str, Any] | None = None
+    if use_merged:
+        # Heterogeneous waves: blocks are packed into waves of n_sms in
+        # GRID order within each barrier phase (a merged wave never spans
+        # a fence) and each wave runs as ONE merged scan. Cross-program
+        # global-memory interactions inside a wave resolve in device order
+        # (per-step, program-slot then (sm, thread) drain); as on real
+        # hardware, blocks that may run concurrently must not race through
+        # global memory — Kernel(barrier=True) is the fence for
+        # cross-block dataflow, and under that contract results are
+        # bit-identical to the step machine's canonical program-major
+        # order (pinned by tests/test_conformance.py).
+        local_bid = np.zeros(n_blocks, np.int64)
+        sh_batches: dict[int, Any] = {}
+        for k in present:
+            pos = np.flatnonzero(gmap == k)
+            local_bid[pos] = np.arange(pos.size)
+            sh_batches[k] = _kernel_shmem(shmems[k], cfgs[k].shmem_depth,
+                                          pos.size, k)
+        # one merged schedule per wave SIGNATURE (the programs present):
+        # memoized here so the wave loop never re-keys the word arrays
+        msched_of: dict[tuple[int, ...], Any] = {}
+
+        def merged_sched(sig):
+            if sig not in msched_of:
+                msched_of[sig] = trace_engine.compile_merged(
+                    [word_arrays[k] for k in sig], [cfgs[k] for k in sig])
+            return msched_of[sig]
+
+        per_wave: list[dict[str, Any]] = []
+        for phase in np.unique(block_phase):
+            blocks_p = np.flatnonzero(block_phase == phase)
+            for w0 in range(0, blocks_p.size, dcfg.n_sms):
+                wave = blocks_p[w0:w0 + dcfg.n_sms]
+                sig = tuple(sorted({int(gmap[b]) for b in wave}))
+                msched = merged_sched(sig)
+                slot = np.asarray([sig.index(int(gmap[b])) for b in wave])
+                # slot-major member order: each program's dispatch runs on
+                # a contiguous sub-batch (grid order kept within a slot)
+                order = np.argsort(slot, kind="stable")
+                blocks, slot = wave[order], slot[order]
+                counts = np.bincount(slot, minlength=len(sig))
+                n = blocks.size
+                pids = gmap[blocks]
+                # per-slot shared-memory init, padded to the device depth
+                # and concatenated along the slot-major member order
+                segs, off = [], 0
+                for j, k in enumerate(sig):
+                    c = int(counts[j])
+                    batch = sh_batches[k]
+                    if batch is None:
+                        segs.append(jnp.zeros((c, shmem_pad), _U32))
+                    else:
+                        img = batch[local_bid[blocks[off:off + c]]]
+                        if img.shape[1] < shmem_pad:
+                            img = jnp.pad(
+                                img,
+                                ((0, 0), (0, shmem_pad - img.shape[1])))
+                        segs.append(img)
+                    off += c
+                sh0 = jnp.concatenate(segs, axis=0)
+                regs_f, sh_f, gm, oob_f = trace_engine.run_wave_merged(
+                    backend, msched, counts, local_bid[blocks], pids,
+                    jnp.zeros((n, MAX_THREADS, N_REGS), _U32), sh0, gm,
+                    jnp.zeros((n,), jnp.bool_))
+                for i, b in enumerate(blocks):
+                    regs_slots[b] = regs_f[i]
+                    shmem_slots[b] = sh_f[i]
+                    oob_slots[b] = oob_f[i]
+                halted = halted and msched.halted
+                per_wave.append({
+                    "programs": [names[k] for k in sig],
+                    "width": int(n),
+                    "scan_steps": int(msched.n_steps),
+                    "padded_steps": int(msched.padded_steps(slot)),
+                })
+        scanned = sum(w["scan_steps"] * w["width"] for w in per_wave)
+        padded = sum(w["padded_steps"] for w in per_wave)
+        merge_stats = {
+            "n_waves": len(per_wave),
+            "scan_steps": scanned,          # scheduled scan rows x width
+            "padded_steps": padded,         # masked no-op rows of those
+            "pad_overhead": (padded / scanned) if scanned else 0.0,
+            "per_wave": per_wave,
+        }
+    else:
+        # homogeneous path: exact lockstep batches per program,
+        # program-major
+        for k, kern in enumerate(kernels):
+            pos = np.flatnonzero(gmap == k)
+            if pos.size == 0:
+                continue
+            cfg, (lo, hi) = cfgs[k], imems[k]
+            sh_batch = _kernel_shmem(shmems[k], cfg.shmem_depth, pos.size,
+                                     k)
+            for w0 in range(0, pos.size, dcfg.n_sms):
+                w1 = min(w0 + dcfg.n_sms, pos.size)
+                n = w1 - w0
+                st = init_device_state(
+                    cfg, n, gmem_depth=dcfg.global_mem_depth,
+                    shmem=None if sh_batch is None else sh_batch[w0:w1],
+                    gmem=gm)
+                bidx = jnp.arange(w0, w1, dtype=_I32)  # program-local BID
+                pidx = jnp.full((n,), k, dtype=_I32)
+                if eng == "trace":
+                    fin = trace_engine.run_wave_trace(
+                        cfg, backend, scheds[k], bidx, pidx, st)
+                else:
+                    fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
+                gm = fin.gmem               # batches run back to back
+                fin_shmem = fin.shmem
+                if cfg.shmem_depth < shmem_pad:
+                    # per-Kernel shmem_depth override: pad back to the
+                    # device depth so mixed launches still stack in
+                    # LaunchResult
+                    fin_shmem = jnp.pad(
+                        fin_shmem,
+                        ((0, 0), (0, shmem_pad - cfg.shmem_depth)))
+                for i, b in enumerate(pos[w0:w1]):
+                    regs_slots[b] = fin.regs[i]
+                    shmem_slots[b] = fin_shmem[i]
+                    oob_slots[b] = fin.oob[i]
+                wave_cycles.append(int(fin.cycles))
+                wave_steps.append(int(fin.steps))
+                machine_by += np.asarray(fin.cycles_by_class, np.int64)
+                halted = halted and bool(fin.halted)
 
     # ---- aggregate counters ---------------------------------------------
     if mode == "static" and len(kernels) == 1:
@@ -814,8 +940,10 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         buffer_offsets=offsets,
         schedule=mode,
         engine=eng,
+        engine_fallback=eng_fallback,
         program_names=tuple(names),
         grid_map=gmap,
         timing=timing,
         static_cycles=static_span,
+        trace_merge=merge_stats,
     )

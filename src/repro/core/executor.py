@@ -319,16 +319,27 @@ DATA_SEL_OF_OP = DATA_SEL_OF_GROUP[_GROUP_OF_OP]
 
 def make_data_handlers(cfg, backend: ExecBackend, d: dict,
                        active: jax.Array, block_idx: jax.Array,
-                       prog_idx: jax.Array):
+                       prog_idx: jax.Array, *,
+                       shmem_depth: int | None = None):
     """Build the 10-way data-path switch body for one decoded instruction.
 
     ``d`` holds the decoded fields as traced i32 scalars (the dict from
     ``_decode`` or one step of the trace engine's pre-decoded schedule);
-    ``active`` is the (512,) flexible-ISA thread mask. Returns a list of
+    ``active`` is the (512,) flexible-ISA thread mask, shared by the whole
+    SM batch — every engine dispatches on lockstep batches of one program
+    (the trace engine's merged heterogeneous waves slice each program's
+    contiguous SM sub-batch before dispatching here). Returns a list of
     handlers over the data-state tuple ``(regs, shmem, gmem, oob)`` —
     index it with ``DATA_SEL_OF_GROUP[group]`` (branch 0 is the identity
     for NOP/control). Sequencer state (pc, stacks, halt) is each engine's
     own business.
+
+    ``shmem_depth`` bounds LOD/STO addressing; it defaults to the shared-
+    memory array's own depth and only differs in merged heterogeneous
+    waves, where programs with a shallower ``Kernel(shmem_depth=)``
+    override share one device-depth batch: accesses in
+    ``[shmem_depth, array depth)`` still trap/drop exactly as they do when
+    the program runs alone on a ``shmem_depth``-deep SM.
     """
     from .machine import MAX_THREADS, MAX_WAVES, N_SP
 
@@ -372,7 +383,7 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
 
     def h_lod(s):
         regs, shmem, gmem, oob = s
-        depth = shmem.shape[1]
+        depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
         addr = addr_of(regs)
         bad = active & ((addr < 0) | (addr >= depth))
         safe = jnp.clip(addr, 0, depth - 1)
@@ -384,7 +395,7 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
 
     def h_sto(s):
         regs, shmem, gmem, oob = s
-        depth = shmem.shape[1]
+        depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
         addr = addr_of(regs)
         bad = active & ((addr < 0) | (addr >= depth))
         vals = col(regs, d["rd"])

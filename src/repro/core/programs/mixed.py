@@ -11,6 +11,14 @@ backfill around the long QRD blocks instead of idling a lockstep wave.
 This is the canonical heterogeneous-launch demo: the acceptance test and
 the benchmark smoke both drive it, and ``LaunchResult.profile()`` shows
 non-zero per-SM occupancy for both programs.
+
+Functionally the launch runs on the trace engine's MERGED heterogeneous
+waves (``core.trace_engine.MergedTraceSchedule``): FFT and QRD blocks of
+the same wave execute in one scan over the merged pre-decoded schedule,
+padded to the longer QRD trace — ``profile()["trace_merge"]`` reports
+the padding overhead per wave, and ``benchmarks/engine_bench.py`` gates
+the merged path at >= 1.2x the step machine's wall clock on this very
+launch.
 """
 from __future__ import annotations
 

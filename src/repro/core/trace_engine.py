@@ -32,6 +32,28 @@ single jitted ``lax.scan`` over the ``(n_sms, 512)`` lockstep batch:
 while the scheduler/timing layer is fed unchanged — cycle counters come
 from the static trace (``trace.static_cycles`` / ``cycles_by_class``),
 which the golden-cycle suite pins bit-equal to the stepping machine's.
+
+Heterogeneous waves
+-------------------
+A mixed ``programs=[Kernel(...), ...]`` grid packs blocks of *different*
+programs into one wave (the tight-packing deployment of arXiv
+2401.04261). Per-program schedules are merged into ONE padded schedule
+(``MergedTraceSchedule``): each program's structure-of-arrays columns are
+padded to the longest participant with masked no-op rows and stacked into
+``(n_steps, n_programs)`` matrices, so the whole ``(n_sms, 512)`` wave
+still runs as a single jitted ``lax.scan``. Wave members are ordered
+slot-major; each scan step dispatches every LIVE program's pre-decoded
+instruction, in program-slot order, on that program's own contiguous SM
+sub-batch — through the SAME ``executor.make_data_handlers`` execute
+stage, so inline and Pallas backends work unchanged and step-vs-trace
+bit-identity is preserved for every launch whose concurrently-resident
+blocks do not race through global memory (the CUDA contract;
+``Kernel(barrier=True)`` is the fence for cross-block dataflow, and
+merged waves never span a barrier phase).
+The merge cache is keyed on the multiset of ``(program, SMConfig)`` pairs
+present in the wave; XLA's jit cache then keys the compiled scan on
+(slot configs, backend, schedule length, wave width). Padding overhead is
+surfaced per wave in ``LaunchResult.profile()["trace_merge"]``.
 """
 from __future__ import annotations
 
@@ -162,6 +184,7 @@ def compile_cache_info():
 
 def compile_cache_clear() -> None:
     _compile_cached.cache_clear()
+    _merge_cached.cache_clear()
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -182,8 +205,151 @@ def _run_schedule(cfg: SMConfig, backend_name: str, xs, block_idx,
                                       prog_idx)
         return jax.lax.switch(x["sel"], handlers, carry), None
 
-    carry, _ = jax.lax.scan(step, (regs, shmem, gmem, oob), xs)
+    # unroll=2 halves the scan's per-step loop overhead (measured ~8% on
+    # the QRD schedule); deeper unrolls regress compile AND run time
+    carry, _ = jax.lax.scan(step, (regs, shmem, gmem, oob), xs, unroll=2)
     return carry
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous waves: merged multi-program schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MergedTraceSchedule:
+    """Several programs' schedules merged into one padded scan.
+
+    ``xs[f]`` is the (n_steps, n_programs) i32 matrix for decoded field
+    ``f``: column ``k`` is program ``k``'s schedule, padded to the longest
+    participant with ``sel=0`` rows (the identity handler — a masked
+    no-op, architecturally invisible). One scan over the rows executes a
+    whole mixed wave; each step dispatches the participating programs in
+    slot order, masked to the SMs running them.
+    """
+
+    cfgs: tuple[SMConfig, ...]          # per program slot
+    parts: tuple[TraceSchedule, ...]    # the merged per-program schedules
+    xs: dict[str, jax.Array]            # (n_steps, n_programs) i32
+    # scan segments (start, end, live slots): the scan is split at every
+    # program's schedule end, so a finished program drops out of the
+    # dispatch loop instead of burning masked no-op dispatches — the
+    # padded column rows past a program's end are never executed
+    segments: tuple[tuple[int, int, tuple[int, ...]], ...]
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.xs["sel"].shape[0])
+
+    @property
+    def n_programs(self) -> int:
+        return len(self.parts)
+
+    @property
+    def halted(self) -> bool:
+        return all(p.halted for p in self.parts)
+
+    def padded_steps(self, slot_idx) -> int:
+        """Scan rows during which a wave member's program is already
+        finished (the SM idles while the wave drains its longest
+        participant), for a wave running the slots in ``slot_idx`` — the
+        merge's padding overhead."""
+        return sum(self.n_steps - self.parts[int(s)].n_steps
+                   for s in slot_idx)
+
+
+@functools.lru_cache(maxsize=256)
+def _merge_cached(keys: tuple, cfgs: tuple) -> MergedTraceSchedule:
+    parts = tuple(_compile_cached(k, c) for k, c in zip(keys, cfgs))
+    n_steps = max(p.n_steps for p in parts)
+    xs = {f: jnp.stack([jnp.pad(p.xs[f], (0, n_steps - p.n_steps))
+                        for p in parts], axis=1)
+          for f in _FIELDS}
+    bounds = sorted({p.n_steps for p in parts} | {0})
+    segments = tuple(
+        (a, b, tuple(k for k, p in enumerate(parts) if p.n_steps >= b))
+        for a, b in zip(bounds[:-1], bounds[1:]))
+    return MergedTraceSchedule(cfgs=cfgs, parts=parts, xs=xs,
+                               segments=segments)
+
+
+def compile_merged(programs, cfgs) -> MergedTraceSchedule:
+    """Merge the schedules of ``programs`` (Programs or word arrays, one
+    per ``SMConfig`` in ``cfgs``) into one padded heterogeneous-wave
+    schedule. Cached on the multiset of ``(program words, SMConfig)``
+    pairs (in slot order); the per-program lowerings are shared with
+    ``compile_program``'s cache."""
+    keys = []
+    for p in programs:
+        words = p.words if hasattr(p, "words") else p
+        keys.append(tuple(int(w) for w in words))
+    return _merge_cached(tuple(keys), tuple(cfgs))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _run_merged(cfgs: tuple, backend_name: str, segments: tuple,
+                counts: tuple, xs, block_idx, prog_idx, regs, shmem,
+                gmem, oob):
+    """Execute one merged heterogeneous wave: one fixed-length scan per
+    segment, each step dispatching the LIVE program slots' pre-decoded
+    instructions, in slot order — the single global port drains one
+    program's writers before the next program's, mirroring the per-cycle
+    (sm, thread) drain discipline. Wave members arrive ordered slot-major
+    (``counts[k]`` SMs per slot), so each dispatch runs the shared
+    execute stage on its program's own contiguous sub-batch — no masked
+    work on other programs' SMs. Segment boundaries sit at each program's
+    schedule end, so the padded rows of finished programs cost nothing."""
+    backend = get_execute_backend(backend_name)
+    tid = jnp.arange(MAX_THREADS, dtype=_I32)
+    lane = tid % N_SP
+    wave = tid // N_SP
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    carry = (regs, shmem, gmem, oob)
+
+    for a, b, live in segments:
+        def step(carry, x, live=live):
+            regs, shmem, gmem, oob = carry
+            for k in live:
+                cfg = cfgs[k]
+                lo, hi = int(offs[k]), int(offs[k + 1])
+                d = {f: x[f][k] for f in _FIELDS}
+                active = (lane < d["act_wthreads"]) \
+                    & (wave < d["act_waves"]) & (tid < cfg.n_threads)
+                handlers = make_data_handlers(
+                    cfg, backend, d, active, block_idx[lo:hi],
+                    prog_idx[lo:hi], shmem_depth=cfg.shmem_depth)
+                sub = (regs[lo:hi], shmem[lo:hi], gmem, oob[lo:hi])
+                r_k, s_k, gmem, o_k = jax.lax.switch(d["sel"], handlers,
+                                                     sub)
+                regs = jax.lax.dynamic_update_slice_in_dim(regs, r_k,
+                                                           lo, 0)
+                shmem = jax.lax.dynamic_update_slice_in_dim(shmem, s_k,
+                                                            lo, 0)
+                oob = jax.lax.dynamic_update_slice_in_dim(oob, o_k, lo, 0)
+            return (regs, shmem, gmem, oob), None
+
+        carry, _ = jax.lax.scan(step, carry,
+                                {f: xs[f][a:b] for f in _FIELDS},
+                                unroll=2)
+    return carry
+
+
+def run_wave_merged(backend: str, msched: MergedTraceSchedule,
+                    counts: tuple, block_idx, prog_idx, regs, shmem,
+                    gmem, oob):
+    """Run one heterogeneous wave. Wave members MUST be ordered
+    slot-major — ``counts[k]`` consecutive SMs run program slot ``k`` of
+    the merged schedule (the device layer's merged dispatch orders them;
+    cross-program global-store drains follow that device order).
+    ``block_idx``/``prog_idx`` carry each SM's program-local ``BID`` and
+    launch-wide ``PID``. ``shmem`` is the device-depth batch — programs
+    with a shallower ``Kernel(shmem_depth=)`` override are bounds-checked
+    at their own depth inside the execute stage. Returns
+    (regs, shmem, gmem, oob)."""
+    return _run_merged(msched.cfgs, backend, msched.segments,
+                       tuple(int(c) for c in counts), msched.xs,
+                       jnp.asarray(block_idx, _I32),
+                       jnp.asarray(prog_idx, _I32), regs, shmem, gmem,
+                       oob)
 
 
 def run_wave_trace(cfg: SMConfig, backend: str, sched: TraceSchedule,

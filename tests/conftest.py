@@ -31,6 +31,11 @@ def pytest_configure(config):
         "markers",
         "scheduler: block-scheduler + golden cycle-model regression tests "
         "(CI runs them standalone via `pytest -m scheduler`)")
+    config.addinivalue_line(
+        "markers",
+        "conformance: engine x schedule x backend x n_sms cross-engine "
+        "conformance matrix (CI runs it standalone via "
+        "`pytest -m conformance`)")
 
 try:
     import hypothesis  # noqa: F401

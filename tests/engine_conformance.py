@@ -1,0 +1,168 @@
+"""Declarative conformance cases for the engine x schedule x backend x
+n_sms cube.
+
+One table (``CASES``) names every golden program plus the heterogeneous
+grids; ``tests/test_conformance.py`` sweeps each case over the full cube
+and asserts bit-identity of the trace engine against the step machine —
+the differential oracle — at the same (schedule, backend, n_sms) point.
+Workload sizes are deliberately tiny: the Pallas backend runs the whole
+sweep through the kernel interpreter, so every case must stay CI-sized.
+
+The table is data, not tests, so other suites (benchmarks, future
+engines) can reuse the same launches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import DeviceConfig, Kernel, LaunchResult, SMConfig, launch
+from repro.core.assembler import assemble, auto_nop
+
+
+@dataclasses.dataclass(frozen=True)
+class ConformanceCase:
+    """One launch, parameterized over the conformance cube axes."""
+
+    build: Callable[..., LaunchResult]  # (engine, schedule, backend, n_sms)
+    heterogeneous: bool = False         # mixed grid (merged trace waves)
+    pallas_sms: tuple[int, ...] = (1, 2)  # n_sms swept under the (slow)
+                                          # Pallas interpreter; inline
+                                          # sweeps the full axis
+
+
+def _saxpy(engine, schedule, backend, n_sms) -> LaunchResult:
+    from repro.core.programs.saxpy import launch_saxpy
+
+    x = np.arange(64, dtype=np.float32)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=512, engine=engine,
+                       backend=backend, sm=SMConfig(max_steps=10_000))
+    _, res = launch_saxpy(2.0, x, np.ones_like(x), device=dev, block=16,
+                          schedule=schedule)
+    return res
+
+
+def _reduction_fused(engine, schedule, backend, n_sms) -> LaunchResult:
+    # two programs + a barrier fence: stage 2 GLDs the partials stage 1
+    # GSTs — the cross-block global-memory dataflow pattern merged waves
+    # must keep behind the fence
+    from repro.core.programs import launch_reduction
+
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=1024, engine=engine,
+                       backend=backend, sm=SMConfig(max_steps=50_000))
+    _, res = launch_reduction(np.arange(256, dtype=np.float32), device=dev,
+                              block=64, fused=True, schedule=schedule)
+    return res
+
+
+def _fft_batch(engine, schedule, backend, n_sms) -> LaunchResult:
+    from repro.core.programs.fft import run_fft_batch
+
+    xs = (np.linspace(-1, 1, 3 * 32).reshape(3, 32)
+          + 0.5j * np.ones((3, 32))).astype(np.complex64)
+    dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       sm=SMConfig(shmem_depth=128, max_steps=100_000))
+    _, res = run_fft_batch(xs, device=dev, schedule=schedule)
+    return res
+
+
+def _qrd_batch(engine, schedule, backend, n_sms) -> LaunchResult:
+    from repro.core.programs.qrd import run_qrd_batch
+
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.1,
+                   np.eye(16, dtype=np.float32) * 2.0])
+    dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       sm=SMConfig(shmem_depth=1024, imem_depth=1024,
+                                   max_steps=200_000))
+    _, _, res = run_qrd_batch(As, device=dev, schedule=schedule)
+    return res
+
+
+def _mixed_fft_qrd(engine, schedule, backend, n_sms,
+                   interleave=True, priorities=None) -> LaunchResult:
+    from repro.core.programs.mixed import launch_fft_qrd, mixed_device
+
+    dev = dataclasses.replace(mixed_device(32, n_sms=n_sms),
+                              engine=engine, backend=backend)
+    xs = (np.ones((3, 32)) + 0.25j * np.arange(32)).astype(np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.05])
+    _, _, _, res = launch_fft_qrd(xs, As, device=dev, schedule=schedule,
+                                  interleave=interleave,
+                                  priorities=priorities)
+    return res
+
+
+_OVR_PROG = """
+    TDX R1
+    PID R2
+    BID R4
+    STO R1, (R1)+0
+    ADD.INT32 R3, R1, R2
+    ADD.INT32 R3, R3, R4
+    GST R3, (R3)+64 {w4,d1}
+    STOP
+"""
+
+
+def _mixed_overrides(engine, schedule, backend, n_sms) -> LaunchResult:
+    # per-Kernel imem/shmem overrides INSIDE one heterogeneous grid: the
+    # small kernel traps stores >= 24 and pads back to the device depth;
+    # every GST writes value == address - 64, so colliding writers are
+    # value-identical and the grid stays deterministic under any wave mix
+    words = assemble(auto_nop(_OVR_PROG, 32)).words
+    other = assemble("TDX R1\nLOD R2, (R1)+0\nADD.INT32 R2, R2, R1\n"
+                     "NOP\nNOP\nSTO R2, (R1)+0\nSTOP").words
+    kerns = [Kernel(words, block=32, name="small", shmem_depth=24,
+                    imem_depth=64),
+             Kernel(other, block=48, name="full")]
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=256, engine=engine,
+                       backend=backend,
+                       sm=SMConfig(shmem_depth=64, max_steps=5_000))
+    return launch(dev, programs=kerns, grid_map=[0, 1, 1, 0, 1],
+                  schedule=schedule)
+
+
+CASES: dict[str, ConformanceCase] = {
+    "saxpy64_b16": ConformanceCase(_saxpy),
+    "reduction256_fused": ConformanceCase(_reduction_fused,
+                                          heterogeneous=True),
+    "fft32_batch3": ConformanceCase(_fft_batch),
+    "qrd16_batch2": ConformanceCase(_qrd_batch, pallas_sms=(2,)),
+    "mixed_fft_qrd": ConformanceCase(_mixed_fft_qrd, heterogeneous=True),
+    "mixed_backloaded_prio": ConformanceCase(
+        lambda e, s, b, n: _mixed_fft_qrd(e, s, b, n, interleave=False,
+                                          priorities=(0, 1)),
+        heterogeneous=True, pallas_sms=(2,)),
+    "mixed_overrides": ConformanceCase(_mixed_overrides,
+                                       heterogeneous=True),
+}
+
+ENGINES = ("step", "trace")
+SCHEDULES = ("static", "dynamic")
+BACKENDS = ("inline", "pallas")
+N_SMS = (1, 2, 4)
+
+
+def cube(backend: str):
+    """The (case, schedule, n_sms) cells swept for one backend."""
+    for name, case in CASES.items():
+        sms = N_SMS if backend == "inline" else case.pallas_sms
+        for schedule in SCHEDULES:
+            for n_sms in sms:
+                yield name, schedule, n_sms
+
+
+def assert_bit_identical(a: LaunchResult, b: LaunchResult) -> None:
+    """Full architectural + counter equality of two launches."""
+    np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
+    np.testing.assert_array_equal(np.asarray(a.shmem), np.asarray(b.shmem))
+    np.testing.assert_array_equal(np.asarray(a.gmem), np.asarray(b.gmem))
+    np.testing.assert_array_equal(np.asarray(a.oob), np.asarray(b.oob))
+    assert a.halted == b.halted
+    assert a.cycles == b.cycles and a.steps == b.steps
+    assert list(a.wave_cycles) == list(b.wave_cycles)
+    assert list(np.asarray(a.cycles_by_class)) \
+        == list(np.asarray(b.cycles_by_class))
+    assert a.static_cycles == b.static_cycles

@@ -1,0 +1,197 @@
+"""Cross-engine conformance matrix: every case of
+``tests/engine_conformance.py`` swept over the engine x schedule x
+backend x n_sms cube, asserted bit-identical against the inline step
+machine — the differential oracle both engines and both backends must
+match at the same (schedule, n_sms) point. Comparing every cell against
+ONE oracle makes the matrix transitive: inline-trace, pallas-step and
+pallas-trace all collapse onto the same architectural state, so any
+engine/backend drift anywhere in the cube fails here.
+
+A hypothesis fuzz extends the table with random legal heterogeneous
+grids (random program mix, grid_map, block sizes, priorities). The fuzz
+programs draw every data op EXCEPT global stores: blocks that may run
+concurrently must not race through global memory (the launch contract —
+see ``device.launch``), and random programs cannot guarantee disjoint
+GST targets across programs; the single-program fuzz in
+``tests/test_trace_engine.py`` covers GST, and the declarative cases
+cover fenced (``Kernel(barrier=True)``) and PID-disjoint global stores.
+
+Run standalone with ``pytest -m conformance``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DeviceConfig, Kernel, SMConfig, assemble, launch
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+
+from engine_conformance import (
+    BACKENDS,
+    CASES,
+    assert_bit_identical,
+    cube,
+)
+
+pytestmark = pytest.mark.conformance
+
+_ORACLE_CACHE: dict = {}
+
+
+def _oracle(name, schedule, n_sms):
+    """The inline step machine's result for one cell (cached per module:
+    every cube cell of a case shares its oracle)."""
+    key = (name, schedule, n_sms)
+    if key not in _ORACLE_CACHE:
+        _ORACLE_CACHE[key] = CASES[name].build("step", schedule, "inline",
+                                               n_sms)
+    return _ORACLE_CACHE[key]
+
+
+def _cells():
+    for backend in BACKENDS:
+        for name, schedule, n_sms in cube(backend):
+            engines = ("trace",) if backend == "inline" \
+                else ("step", "trace")
+            for engine in engines:
+                yield name, schedule, backend, n_sms, engine
+
+
+@pytest.mark.parametrize("name,schedule,backend,n_sms,engine",
+                         list(_cells()))
+def test_conformance_cube(name, schedule, backend, n_sms, engine):
+    case = CASES[name]
+    res = case.build(engine, schedule, backend, n_sms)
+    assert res.engine == engine and res.schedule == schedule
+    if engine == "trace" and case.heterogeneous:
+        # the merged heterogeneous path must actually be the one running
+        merge = res.profile().get("trace_merge")
+        assert merge and merge["n_waves"] >= 1
+        assert merge["pad_overhead"] >= 0.0
+    assert_bit_identical(res, _oracle(name, schedule, n_sms))
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing the matrix relies on
+# ---------------------------------------------------------------------------
+
+def test_trace_on_mixed_grid_runs_merged_not_fallback():
+    # the PR-3 engine ran mixed grids as per-program homogeneous waves;
+    # engine="trace" must now take the merged heterogeneous path and say so
+    res = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2)
+    assert res.engine == "trace" and res.engine_fallback is None
+    merge = res.profile()["trace_merge"]
+    assert merge["n_waves"] >= 1 and merge["scan_steps"] > 0
+    # interleaved FFT+QRD waves really are heterogeneous
+    assert any(len(w["programs"]) > 1 for w in merge["per_wave"])
+    # padding accounting: no-op rows never exceed scheduled rows
+    assert 0.0 <= merge["pad_overhead"] < 1.0
+
+
+def test_auto_engine_fallback_is_profile_visible():
+    runaway = assemble("top:\nTDX R1\nJMP top")
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=64,
+                        sm=SMConfig(max_steps=50))
+    res = launch(dcfg, runaway, grid=(1,), block=16)
+    assert res.engine == "step"
+    assert res.profile()["engine_fallback"] == "fuel-limited-trace"
+    # an explicit engine choice is never a fallback
+    res = launch(dcfg, runaway, grid=(1,), block=16, engine="step")
+    assert res.profile()["engine_fallback"] is None
+
+
+def test_auto_engine_merges_mixed_grids():
+    res = CASES["mixed_fft_qrd"].build("auto", "auto", "inline", 2)
+    assert res.engine == "trace" and res.engine_fallback is None
+    assert res.trace_merge is not None
+
+
+def test_forced_trace_merges_fuel_limited_mixed_grid():
+    # a merged wave pads every member to the LONGEST participant — a
+    # fuel-limited trace must still replay exactly alongside a halting one
+    runaway = assemble("top:\nTDX R1\nADD.INT32 R2, R1, R1\n"
+                       "STO R2, (R1)+0\nJMP top").words
+    short = assemble("TDX R3\nSTO R3, (R3)+32\nSTOP").words
+    kerns = [Kernel(runaway, block=16, name="runaway"),
+             Kernel(short, block=16, name="short")]
+    outs = {}
+    for eng in ("step", "trace"):
+        dcfg = DeviceConfig(n_sms=2, global_mem_depth=64, engine=eng,
+                            sm=SMConfig(shmem_depth=64, max_steps=37))
+        outs[eng] = launch(dcfg, programs=kerns, grid_map=[0, 1])
+    assert outs["trace"].trace_merge is not None
+    assert not outs["trace"].halted
+    assert_bit_identical(outs["step"], outs["trace"])
+
+
+# ---------------------------------------------------------------------------
+# fuzz: random legal heterogeneous grids
+# ---------------------------------------------------------------------------
+
+_DATA_OPS = [Op.ADD, Op.SUB, Op.MUL, Op.AND, Op.OR, Op.XOR, Op.LSL,
+             Op.LSR, Op.LODI, Op.TDX, Op.TDY, Op.BID, Op.PID, Op.LOD,
+             Op.STO, Op.GLD, Op.DOT, Op.SUM, Op.INVSQR, Op.NOP]
+
+
+def _data_instr(draw):
+    op = draw(st.sampled_from(_DATA_OPS))
+    return Instr(op=op, typ=draw(st.sampled_from(list(Typ))),
+                 rd=draw(st.integers(0, 15)), ra=draw(st.integers(0, 15)),
+                 rb=draw(st.integers(0, 15)),
+                 imm=draw(st.integers(0, 31)),
+                 width=draw(st.sampled_from(list(Width))),
+                 depth=draw(st.sampled_from(list(Depth))))
+
+
+@st.composite
+def _random_program(draw):
+    """pre | INIT t; body; LOOP | STOP — terminating by construction."""
+    pre = [_data_instr(draw) for _ in range(draw(st.integers(0, 3)))]
+    body = [_data_instr(draw) for _ in range(draw(st.integers(1, 4)))]
+    trip = draw(st.integers(1, 4))
+    prog = list(pre)
+    prog.append(Instr(op=Op.INIT, imm=trip))
+    body_start = len(prog)
+    prog.extend(body)
+    prog.append(Instr(op=Op.LOOP, imm=body_start))
+    prog.append(Instr(op=Op.STOP))
+    return np.array([i.encode() for i in prog], np.int64)
+
+
+@st.composite
+def _random_grid(draw):
+    n_progs = draw(st.integers(2, 3))
+    progs = [draw(_random_program()) for _ in range(n_progs)]
+    blocks = [draw(st.sampled_from([16, 32, 48])) for _ in range(n_progs)]
+    prios = [draw(st.integers(0, 3)) for _ in range(n_progs)]
+    gmap = draw(st.lists(st.integers(0, n_progs - 1), min_size=2,
+                         max_size=7))
+    return progs, blocks, prios, gmap
+
+
+@settings(max_examples=25, deadline=None)
+@given(grid=_random_grid(), seed=st.integers(0, 2**31 - 1),
+       n_sms=st.integers(1, 3),
+       schedule=st.sampled_from(["static", "dynamic"]))
+def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule):
+    progs, blocks, prios, gmap = grid
+    rng = np.random.default_rng(seed)
+    gmem = rng.standard_normal(64).astype(np.float32)
+    shmems = [rng.standard_normal(
+        (int(np.sum(np.asarray(gmap) == k)) or 1, 64)).astype(np.float32)
+        for k in range(len(progs))]
+    kerns = [Kernel(p, block=b, priority=pr)
+             for p, b, pr in zip(progs, blocks, prios)]
+    outs = {}
+    for engine in ("step", "trace"):
+        dcfg = DeviceConfig(n_sms=n_sms, global_mem_depth=64,
+                            engine=engine,
+                            sm=SMConfig(shmem_depth=64, max_steps=500))
+        outs[engine] = launch(
+            dcfg, programs=kerns, grid_map=gmap, gmem=gmem,
+            shmem=[shmems[k] if (np.asarray(gmap) == k).any() else None
+                   for k in range(len(progs))],
+            schedule=schedule)
+    if len(set(gmap)) > 1:
+        assert outs["trace"].trace_merge is not None
+    assert_bit_identical(outs["step"], outs["trace"])

@@ -75,14 +75,14 @@ def _qrd_batch(n_sms):
     return res
 
 
-def _mixed(schedule, priorities=None, interleave=True):
+def _mixed(schedule, priorities=None, interleave=True, engine=None):
     from repro.core.programs import launch_fft_qrd
 
     xs = np.ones((6, 64), np.complex64)
     As = np.stack([np.eye(16, dtype=np.float32)] * 3)
     _, _, _, res = launch_fft_qrd(xs, As, schedule=schedule,
                                   priorities=priorities,
-                                  interleave=interleave)
+                                  interleave=interleave, engine=engine)
     return res
 
 
@@ -101,6 +101,22 @@ CASES["mixed_fft_qrd[4sm,dynamic,fifo-backloaded]"] = \
     lambda: _mixed("dynamic", interleave=False)
 CASES["mixed_fft_qrd[4sm,dynamic,qrd-first]"] = \
     lambda: _mixed("dynamic", priorities=(0, 1), interleave=False)
+# heterogeneous launches pinned on EACH functional engine: timing comes
+# from the static traces either way, so the trace engine's merged waves
+# must report exactly the step machine's totals
+CASES["mixed_fft_qrd[4sm,dynamic,trace-engine]"] = \
+    lambda: _mixed("dynamic", engine="trace")
+CASES["mixed_fft_qrd[4sm,static,trace-engine]"] = \
+    lambda: _mixed("static", engine="trace")
+
+
+@pytest.mark.parametrize("schedule", ["static", "dynamic"])
+def test_heterogeneous_trace_engine_reports_step_cycle_totals(schedule):
+    tr, st = _mixed(schedule, engine="trace"), _mixed(schedule,
+                                                      engine="step")
+    assert tr.engine == "trace" and tr.trace_merge is not None
+    assert st.engine == "step"
+    assert _record(tr) == _record(st)
 
 
 @pytest.fixture(scope="module")

@@ -250,6 +250,38 @@ def test_kernel_imem_override_bounds_program_length():
 
 
 @pytest.mark.parametrize("engine", ["step", "trace"])
+def test_kernel_overrides_per_program_in_mixed_grid(engine):
+    # BOTH programs of one heterogeneous launch carry their own override:
+    # each block is bounds-checked at ITS program's depth even when the
+    # merged trace path stacks them into one device-depth wave batch
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP").words
+    kerns = [Kernel(prog, block=64, name="a", shmem_depth=16),
+             Kernel(prog, block=64, name="b", shmem_depth=48,
+                    imem_depth=32)]
+    res = launch(_dcfg(n_sms=2, engine=engine, shmem_depth=64),
+                 programs=kerns, grid_map=[0, 1, 1, 0])
+    if engine == "trace":
+        assert res.trace_merge is not None     # the merged path ran
+    oob = np.asarray(res.oob)
+    assert oob.all()                 # 64 threads overflow both overrides
+    sh = np.asarray(res.shmem)
+    assert sh.shape[1] == 64         # padded back to the device depth
+    for b, depth in zip(range(4), (16, 48, 48, 16)):
+        np.testing.assert_array_equal(sh[b, :depth], np.arange(depth))
+        np.testing.assert_array_equal(sh[b, depth:], 0)
+
+
+def test_kernel_override_ceiling_rejected_in_mixed_grid():
+    # the ceiling check runs per program of a heterogeneous launch too
+    prog = assemble("STOP").words
+    kerns = [Kernel(prog, block=16),
+             Kernel(prog, block=16, shmem_depth=1 << 20)]
+    with pytest.raises(ValueError, match="program 1 exceeds the device "
+                                         "ceiling"):
+        launch(_dcfg(), programs=kerns, grid_map=[0, 1])
+
+
+@pytest.mark.parametrize("engine", ["step", "trace"])
 def test_kernel_shmem_override_tightens_oob_and_pads_result(engine):
     # thread t stores to address t: legal at the device depth (64), but
     # threads >= 32 are out of range under a shmem_depth=32 override
