@@ -72,6 +72,29 @@ def smoke() -> None:
     print(f"smoke_mixed_launch,0.0,dynamic={mres.cycles} "
           f"static={mres.static_cycles} "
           f"merge_pad={merge['pad_overhead']:.2f}")
+    # wave packing: on the backloaded mixed grid (grid-order waves
+    # straddle the FFT/QRD boundary) length packing must cut the
+    # launch-level pad aggregate by >= 25% — a deterministic gate on the
+    # packer itself, independent of wall-clock jitter. Bit-identity of
+    # packed results is the conformance suite's job.
+    from repro.core.programs.mixed import launch_fft_qrd as _lfq
+    from repro.core.programs.mixed import mixed_device
+
+    xs6 = (rng.standard_normal((6, 32))
+           + 1j * rng.standard_normal((6, 32))).astype(np.complex64)
+    As3 = rng.standard_normal((3, 16, 16)).astype(np.float32)
+    pads = {}
+    for pol in ("grid", "length"):
+        _, _, _, pres = _lfq(xs6, As3, device=mixed_device(32, n_sms=4),
+                             engine="trace", interleave=False, packing=pol)
+        tm = pres.profile()["trace_merge"]
+        assert tm["policy"] == pol
+        pads[pol] = tm["pad_overhead_total"]
+    assert pads["grid"] > 0, "backloaded mixed grid lost its pad overhead"
+    assert pads["length"] <= 0.75 * pads["grid"], (
+        f"length packing cut pad_overhead_total by < 25%: {pads}")
+    print(f"smoke_packed_launch,0.0,pad_total {pads['grid']}->"
+          f"{pads['length']}")
     # step-vs-trace engine wall clock; writes BENCH_engine.json and gates
     # CI on the trace engine not losing on the FFT/QRD lines and beating
     # 1.2x on the merged heterogeneous mixed line

@@ -17,6 +17,9 @@ Public API:
                                            launch(..., engine="trace"))
     MergedTraceSchedule, compile_merged  — heterogeneous-wave schedules
                                            (mixed grids as one padded scan)
+    WavePacking, pack_waves              — schedule-aware wave packing
+                                           (which blocks share a wave;
+                                           launch(..., packing="length"))
     profile                              — Table III/IV-style cycle profile
     resources                            — Tables I/V + §III.E analytic model
 """
@@ -31,6 +34,7 @@ from .device import (
     launch,
     pack_buffers,
 )
+from .packing import PACKINGS, WavePacking, pack_waves
 from .scheduler import Schedule, schedule_blocks
 from .executor import (
     ExecBackend,
@@ -68,6 +72,7 @@ __all__ = [
     "DeviceConfig", "DeviceState", "Kernel", "LaunchResult", "buffer_layout",
     "launch", "pack_buffers",
     "Schedule", "schedule_blocks",
+    "PACKINGS", "WavePacking", "pack_waves",
     "ENGINES", "MergedTraceSchedule", "TraceSchedule", "compile_merged",
     "compile_program",
     "pack_imem", "run", "run_many",

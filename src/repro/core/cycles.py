@@ -112,6 +112,14 @@ def instr_cycles(ins: Instr, n_threads: int, n_sms: int = 1) -> int:
 # static program traces (the host-side per-SM sequencer)
 # ---------------------------------------------------------------------------
 
+# ops with NO architectural data effect (sequencer bookkeeping only);
+# the complement is exactly the ops executor.DATA_SEL_OF_OP dispatches
+# to a data handler — trace_engine._compile_cached asserts the two
+# definitions agree on every lowered program
+_SEQUENCER_ONLY = frozenset(
+    (Op.NOP, Op.JMP, Op.JSR, Op.RTS, Op.LOOP, Op.INIT, Op.STOP))
+
+
 @dataclasses.dataclass(frozen=True)
 class TraceInstr:
     """One issued instruction in a block's static trace."""
@@ -151,6 +159,16 @@ class ProgramTrace:
     def gmem_cycles(self) -> int:
         """Cycles spent occupying the global-memory port."""
         return sum(t.cycles for t in self.instrs if t.gmem)
+
+    @functools.cached_property
+    def data_steps(self) -> int:
+        """Issued instructions with an architectural data effect — the
+        rows of the trace engine's pre-decoded schedule
+        (``TraceSchedule.n_steps`` pins the two equal), and therefore
+        the schedule length the wave packer bins on. NOP and control
+        instructions are sequencer-only: the trace engine compiles them
+        out, so they contribute no scan rows and no merge padding."""
+        return sum(1 for t in self.instrs if t.op not in _SEQUENCER_ONLY)
 
     def static_cycles(self, wave_n: int) -> int:
         """Cycle cost in a HOMOGENEOUS lockstep wave: ``wave_n`` SMs issue

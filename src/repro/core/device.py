@@ -74,6 +74,7 @@ import numpy as np
 from . import isa, trace_engine
 from .cycles import ProgramTrace, program_trace
 from .isa import NUM_CLASSES, Op
+from .packing import PACKINGS, WavePacking, pack_waves
 from .scheduler import SCHEDULES, Schedule, schedule_blocks
 from .machine import (
     LOOP_STACK_DEPTH,
@@ -133,6 +134,11 @@ class DeviceConfig:
                                       # "step" while-loop machine | "trace"
                                       # decode-once scan | "auto" (trace
                                       # whenever the static trace halts)
+    packing: str = "grid"             # default wave-packing policy:
+                                      # "grid" chunks (opt-in-stable
+                                      # default) | "length" pad-minimal
+                                      # waves | "auto" (length for mixed
+                                      # grids — see core.packing)
 
     def __post_init__(self):
         if self.n_sms < 1:
@@ -145,6 +151,9 @@ class DeviceConfig:
         if self.engine not in trace_engine.ENGINES + ("auto",):
             raise ValueError(f"engine={self.engine!r} must be one of "
                              f"{trace_engine.ENGINES + ('auto',)}")
+        if self.packing not in PACKINGS:
+            raise ValueError(f"packing={self.packing!r} must be one of "
+                             f"{PACKINGS}")
 
 
 @jax.tree_util.register_dataclass
@@ -452,6 +461,8 @@ class LaunchResult:
     timing: Schedule | None = None      # per-SM / per-block timeline
     static_cycles: int | None = None    # wave-schedule baseline makespan
     trace_merge: dict[str, Any] | None = None  # heterogeneous-wave stats
+    packing: str = "grid"               # resolved wave-packing policy
+    wave_packing: WavePacking | None = None  # the membership decision
 
     @property
     def n_blocks(self) -> int:
@@ -485,9 +496,11 @@ class LaunchResult:
         device-wide port: occupancy, queueing, and utilization.
 
         ``engine_fallback`` is non-None exactly when ``engine="auto"``
-        degraded to the step machine (never silently); ``trace_merge``
-        appears when the trace engine batched heterogeneous waves and
-        reports the per-wave merge padding overhead.
+        degraded to the step machine (never silently); ``packing`` is
+        the resolved wave-packing policy; ``trace_merge`` appears when
+        the trace engine batched heterogeneous waves and reports the
+        packing policy, per-wave merge padding, and the launch-level
+        ``pad_overhead_total`` aggregate.
         """
         by = np.asarray(self.cycles_by_class)
         total = int(by.sum())
@@ -497,6 +510,7 @@ class LaunchResult:
             "schedule": self.schedule,
             "engine": self.engine,
             "engine_fallback": self.engine_fallback,
+            "packing": self.packing,
             "n_waves": self.n_waves,
             "wave_cycles": [int(c) for c in self.wave_cycles],
             "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
@@ -597,7 +611,8 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
            shmem: Any = None, gmem: Any = None,
            backend: str | None = None, dim_x: int | None = None,
            schedule: str | None = None,
-           engine: str | None = None) -> LaunchResult:
+           engine: str | None = None,
+           packing: str | None = None) -> LaunchResult:
     """CUDA-style kernel launch on the multi-SM device.
 
     Two forms:
@@ -648,16 +663,31 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         programs — never silently: ``profile()["engine_fallback"]`` names
         the reason. Both engines are bit-identical on every backend;
         timing is engine-independent.
+      packing: wave-packing policy deciding WHICH blocks share a wave
+        within each barrier phase (``core.packing``). "grid" (the
+        default) chunks blocks in grid order — byte-identical to the
+        pre-packing device. "length" stably sorts each phase by
+        descending schedule length and picks pad-minimal wave
+        boundaries, so a mixed grid's merged waves stop padding short
+        programs to long ones. "auto" resolves to "length" exactly when
+        a phase mixes schedule lengths. One packing feeds every layer:
+        the merged functional waves, the static wave timing, and the
+        dynamic queue's FIFO tiebreak — so ``cycles``/``wave_cycles``
+        describe the waves that actually ran and dynamic-vs-static stays
+        a like-for-like comparison.
 
     Timing comes from ``core.scheduler`` over the programs' static traces;
     architectural results are computed by exact lockstep batch machines.
     The step machine runs a canonical program-major order; the trace
-    engine's merged heterogeneous waves run in grid order within each
-    barrier phase. The two coincide — and results are invariant to the
-    dispatch discipline and to ``grid_map`` permutations of equal-program
+    engine's merged heterogeneous waves follow the wave packing (grid
+    order within each barrier phase under the default policy). The two
+    coincide — and results are invariant to the dispatch discipline, to
+    the packing policy, and to ``grid_map`` permutations of equal-program
     blocks — under the standard launch contract that blocks which may run
     concurrently (same phase) do not race through global memory; use
-    ``Kernel(barrier=True)`` to fence cross-block dataflow.
+    ``Kernel(barrier=True)`` to fence cross-block dataflow. Packing
+    therefore only changes which blocks share a wave (and with it the
+    modeled timing and merge padding), never observable state.
     """
     # ---- normalize to kernels + grid_map --------------------------------
     if programs is not None:
@@ -745,20 +775,33 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
               else None
               for k, (w, c) in enumerate(zip(word_arrays, cfgs))]
 
-    # ---- the schedule (timing) ------------------------------------------
+    # ---- wave packing: one membership decision for every layer ----------
+    # the packer keys on each block's pre-decoded schedule length
+    # (``trace.data_steps`` — the scan rows a merged wave pads to, cached
+    # on the trace so repeated launches pay nothing); the SAME
+    # WavePacking then shapes the merged functional waves, the static
+    # wave timing, and the dynamic queue's dispatch order
     phase_of_kernel = np.cumsum([int(k.barrier) for k in kernels])
     block_phase = phase_of_kernel[gmap]
+    wp = pack_waves([traces[k].data_steps for k in gmap], dcfg.n_sms,
+                    policy=packing if packing is not None
+                    else dcfg.packing,
+                    phase_of=block_phase)
+
+    # ---- the schedule (timing) ------------------------------------------
     block_priority = np.asarray([kernels[k].priority for k in gmap],
                                 np.int64)
     block_traces = [traces[k] for k in gmap]
     timing = schedule_blocks(block_traces, dcfg.n_sms, mode,
                              phase_of=block_phase,
-                             priority_of=block_priority)
+                             priority_of=block_priority,
+                             packing=wp)
     if mode == "static":
         static_span = timing.makespan
     else:
         static_span = schedule_blocks(block_traces, dcfg.n_sms, "static",
-                                      phase_of=block_phase).makespan
+                                      phase_of=block_phase,
+                                      packing=wp).makespan
 
     # ---- global-memory image --------------------------------------------
     offsets = None
@@ -781,16 +824,18 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     shmem_pad = dcfg.sm.shmem_depth
     merge_stats: dict[str, Any] | None = None
     if use_merged:
-        # Heterogeneous waves: blocks are packed into waves of n_sms in
-        # GRID order within each barrier phase (a merged wave never spans
-        # a fence) and each wave runs as ONE merged scan. Cross-program
-        # global-memory interactions inside a wave resolve in device order
-        # (per-step, program-slot then (sm, thread) drain); as on real
-        # hardware, blocks that may run concurrently must not race through
-        # global memory — Kernel(barrier=True) is the fence for
-        # cross-block dataflow, and under that contract results are
-        # bit-identical to the step machine's canonical program-major
-        # order (pinned by tests/test_conformance.py).
+        # Heterogeneous waves: the wave packing decides which blocks
+        # share a wave (grid order within each barrier phase under the
+        # default policy; pad-minimal membership under "length" — a
+        # merged wave never spans a fence either way) and each wave runs
+        # as ONE merged scan. Cross-program global-memory interactions
+        # inside a wave resolve in device order (per-step, program-slot
+        # then (sm, thread) drain); as on real hardware, blocks that may
+        # run concurrently must not race through global memory —
+        # Kernel(barrier=True) is the fence for cross-block dataflow,
+        # and under that contract results are bit-identical to the step
+        # machine's canonical program-major order for EVERY packing
+        # (pinned by tests/test_conformance.py).
         local_bid = np.zeros(n_blocks, np.int64)
         sh_batches: dict[int, Any] = {}
         for k in present:
@@ -799,7 +844,9 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
             sh_batches[k] = _kernel_shmem(shmems[k], cfgs[k].shmem_depth,
                                           pos.size, k)
         # one merged schedule per wave SIGNATURE (the programs present):
-        # memoized here so the wave loop never re-keys the word arrays
+        # memoized here so the wave loop never re-keys the word arrays;
+        # the packed membership decides which signatures (multisets of
+        # (program, SMConfig) pairs) ever get compiled
         msched_of: dict[tuple[int, ...], Any] = {}
 
         def merged_sched(sig):
@@ -809,61 +856,54 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
             return msched_of[sig]
 
         per_wave: list[dict[str, Any]] = []
-        for phase in np.unique(block_phase):
-            blocks_p = np.flatnonzero(block_phase == phase)
-            for w0 in range(0, blocks_p.size, dcfg.n_sms):
-                wave = blocks_p[w0:w0 + dcfg.n_sms]
-                sig = tuple(sorted({int(gmap[b]) for b in wave}))
-                msched = merged_sched(sig)
-                slot = np.asarray([sig.index(int(gmap[b])) for b in wave])
-                # slot-major member order: each program's dispatch runs on
-                # a contiguous sub-batch (grid order kept within a slot)
-                order = np.argsort(slot, kind="stable")
-                blocks, slot = wave[order], slot[order]
-                counts = np.bincount(slot, minlength=len(sig))
-                n = blocks.size
-                pids = gmap[blocks]
-                # per-slot shared-memory init, padded to the device depth
-                # and concatenated along the slot-major member order
-                segs, off = [], 0
-                for j, k in enumerate(sig):
-                    c = int(counts[j])
-                    batch = sh_batches[k]
-                    if batch is None:
-                        segs.append(jnp.zeros((c, shmem_pad), _U32))
-                    else:
-                        img = batch[local_bid[blocks[off:off + c]]]
-                        if img.shape[1] < shmem_pad:
-                            img = jnp.pad(
-                                img,
-                                ((0, 0), (0, shmem_pad - img.shape[1])))
-                        segs.append(img)
-                    off += c
-                sh0 = jnp.concatenate(segs, axis=0)
-                regs_f, sh_f, gm, oob_f = trace_engine.run_wave_merged(
-                    backend, msched, counts, local_bid[blocks], pids,
-                    jnp.zeros((n, MAX_THREADS, N_REGS), _U32), sh0, gm,
-                    jnp.zeros((n,), jnp.bool_))
-                for i, b in enumerate(blocks):
-                    regs_slots[b] = regs_f[i]
-                    shmem_slots[b] = sh_f[i]
-                    oob_slots[b] = oob_f[i]
-                halted = halted and msched.halted
-                per_wave.append({
-                    "programs": [names[k] for k in sig],
-                    "width": int(n),
-                    "scan_steps": int(msched.n_steps),
-                    "padded_steps": int(msched.padded_steps(slot)),
-                })
-        scanned = sum(w["scan_steps"] * w["width"] for w in per_wave)
-        padded = sum(w["padded_steps"] for w in per_wave)
-        merge_stats = {
-            "n_waves": len(per_wave),
-            "scan_steps": scanned,          # scheduled scan rows x width
-            "padded_steps": padded,         # masked no-op rows of those
-            "pad_overhead": (padded / scanned) if scanned else 0.0,
-            "per_wave": per_wave,
-        }
+        for wave_ids in wp.waves:
+            wave = np.asarray(wave_ids, np.int64)
+            sig = tuple(sorted({int(gmap[b]) for b in wave}))
+            msched = merged_sched(sig)
+            slot = np.asarray([sig.index(int(gmap[b])) for b in wave])
+            # slot-major member order: each program's dispatch runs on
+            # a contiguous sub-batch (grid order kept within a slot)
+            order = np.argsort(slot, kind="stable")
+            blocks, slot = wave[order], slot[order]
+            counts = np.bincount(slot, minlength=len(sig))
+            n = blocks.size
+            pids = gmap[blocks]
+            # per-slot shared-memory init, padded to the device depth
+            # and concatenated along the slot-major member order
+            segs, off = [], 0
+            for j, k in enumerate(sig):
+                c = int(counts[j])
+                batch = sh_batches[k]
+                if batch is None:
+                    segs.append(jnp.zeros((c, shmem_pad), _U32))
+                else:
+                    img = batch[local_bid[blocks[off:off + c]]]
+                    if img.shape[1] < shmem_pad:
+                        img = jnp.pad(
+                            img,
+                            ((0, 0), (0, shmem_pad - img.shape[1])))
+                    segs.append(img)
+                off += c
+            sh0 = jnp.concatenate(segs, axis=0)
+            regs_f, sh_f, gm, oob_f = trace_engine.run_wave_merged(
+                backend, msched, counts, local_bid[blocks], pids,
+                jnp.zeros((n, MAX_THREADS, N_REGS), _U32), sh0, gm,
+                jnp.zeros((n,), jnp.bool_))
+            for i, b in enumerate(blocks):
+                regs_slots[b] = regs_f[i]
+                shmem_slots[b] = sh_f[i]
+                oob_slots[b] = oob_f[i]
+            halted = halted and msched.halted
+            pad = int(msched.padded_steps(slot))
+            rows = int(msched.n_steps) * n
+            per_wave.append({
+                "programs": [names[k] for k in sig],
+                "width": int(n),
+                "scan_steps": int(msched.n_steps),
+                "padded_steps": pad,
+                "pad_overhead": (pad / rows) if rows else 0.0,
+            })
+        merge_stats = trace_engine.merge_profile(per_wave, wp.policy)
     else:
         # homogeneous path: exact lockstep batches per program,
         # program-major
@@ -946,4 +986,6 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         timing=timing,
         static_cycles=static_span,
         trace_merge=merge_stats,
+        packing=wp.policy,
+        wave_packing=wp,
     )

@@ -46,7 +46,8 @@ def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
                    schedule: str | None = None, backend: str | None = None,
                    interleave: bool = True,
                    priorities: tuple[int, int] | None = None,
-                   engine: str | None = None
+                   engine: str | None = None,
+                   packing: str | None = None
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                               LaunchResult]:
     """Run ``xs`` (batch_f, n) complex FFTs and ``As`` (batch_q, 16, 16)
@@ -58,7 +59,10 @@ def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
     (fft, qrd) ``Kernel.priority`` pair for the dynamic dispatch queue —
     e.g. ``(0, 1)`` drains the long QRD blocks first so they don't
     straggle behind a queue of short FFTs. ``engine`` forwards to
-    ``launch`` ("step" | "trace" | None for the device default).
+    ``launch`` ("step" | "trace" | None for the device default), as does
+    ``packing`` ("grid" | "length" | "auto") — ``"length"`` stops the
+    merged trace waves padding short FFT schedules to the long QRD one
+    wherever the grid shape allows pure waves.
     """
     xs, As = np.asarray(xs), np.asarray(As)
     batch_f, n = int(xs.shape[0]), int(xs.shape[1])
@@ -86,7 +90,8 @@ def launch_fft_qrd(xs: np.ndarray, As: np.ndarray,
                    for k, p in zip(kernels, priorities)]
     res = launch(device, programs=kernels,
                  grid_map=grid_map, shmem=[fft_images, qrd_images],
-                 backend=backend, schedule=schedule, engine=engine)
+                 backend=backend, schedule=schedule, engine=engine,
+                 packing=packing)
 
     # unpack per-program results: blocks are in grid_map order; program-
     # local order is preserved within it

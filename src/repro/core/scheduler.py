@@ -42,6 +42,7 @@ from typing import Sequence
 import numpy as np
 
 from .cycles import ProgramTrace
+from .packing import WavePacking
 
 SCHEDULES = ("static", "dynamic")
 
@@ -105,7 +106,8 @@ class Schedule:
 def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
                     mode: str,
                     phase_of: Sequence[int] | None = None,
-                    priority_of: Sequence[int] | None = None) -> Schedule:
+                    priority_of: Sequence[int] | None = None,
+                    packing: WavePacking | None = None) -> Schedule:
     """Schedule ``traces[b]`` (one per block, in grid order) onto ``n_sms``
     SMs under the given discipline.
 
@@ -120,6 +122,17 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     order, so all-equal priorities (the default) reproduce the plain FIFO
     schedule exactly. The static wave schedule ignores priority — waves
     are grid order by definition.
+
+    ``packing`` (a :class:`core.packing.WavePacking`) overrides the
+    grid-order wave rule with an explicit membership decision: the
+    static schedule runs exactly ``packing.waves`` (each wave's members
+    lockstep, every member charged the whole wave's port drain), and the
+    dynamic FIFO tiebreak becomes the packed dispatch order — BOTH
+    disciplines must consume the same packing, or ``dynamic <= static``
+    stops being a like-for-like comparison (list dispatch in order X
+    never loses to serial waves chunked from order X, but it can lose to
+    waves chunked from a different one). ``packing=None`` is grid order,
+    bit-identical to the pre-packing scheduler.
     """
     if mode not in SCHEDULES:
         raise ValueError(f"schedule mode {mode!r} not in {SCHEDULES}")
@@ -133,16 +146,50 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
         if prio.shape != (n_blocks,):
             raise ValueError(f"priority_of has shape {prio.shape}, want "
                              f"({n_blocks},)")
+    if phase_of is not None:
+        phase = np.asarray(list(phase_of), np.int64)
+        if phase.shape != (n_blocks,):
+            raise ValueError(f"phase_of has shape {phase.shape}, want "
+                             f"({n_blocks},)")
+    if packing is not None:
+        if packing.n_blocks != n_blocks:
+            raise ValueError(f"packing covers {packing.n_blocks} blocks, "
+                             f"schedule has {n_blocks}")
+        if packing.n_sms != n_sms:
+            raise ValueError(f"packing was built for {packing.n_sms} SMs, "
+                             f"schedule has {n_sms}")
+        if phase_of is not None:
+            # the packing must respect THIS schedule's fences: a packed
+            # wave that mixed phases (or ran out of phase order) would
+            # let the packed static path model blocks from both sides of
+            # a barrier as concurrent
+            last_ph = None
+            for wave in packing.waves:
+                phs = {int(phase[b]) for b in wave}
+                if len(phs) != 1:
+                    raise ValueError(f"packed wave {wave} spans barrier "
+                                     f"phases {sorted(phs)}")
+                ph = phs.pop()
+                if last_ph is not None and ph < last_ph:
+                    raise ValueError("packed waves run out of barrier-"
+                                     "phase order")
+                last_ph = ph
+        if mode == "static":
+            # the packed wave rule: membership comes from the packing,
+            # waves run back to back in packed (phase-major) order
+            return _schedule_static(traces, n_sms, waves=packing.waves)
+        # dynamic: the packed order replaces grid order as the FIFO
+        # tiebreak; rank[b] = b's position in the packed dispatch order
+        rank = np.empty(n_blocks, np.int64)
+        rank[packing.order] = np.arange(n_blocks)
+    else:
+        rank = np.arange(n_blocks, dtype=np.int64)
     if mode == "static":
-        sim = lambda tr, n, _p: _schedule_static(tr, n)  # noqa: E731
+        sim = lambda tr, n, _p, _r: _schedule_static(tr, n)  # noqa: E731
     else:
         sim = _schedule_dynamic
     if phase_of is None:
-        return sim(traces, n_sms, prio)
-    phase = np.asarray(list(phase_of), np.int64)
-    if phase.shape != (n_blocks,):
-        raise ValueError(f"phase_of has shape {phase.shape}, want "
-                         f"({n_blocks},)")
+        return sim(traces, n_sms, prio, rank)
     parts = [np.flatnonzero(phase == p) for p in np.unique(phase)]
     sm = np.zeros(n_blocks, np.int64)
     start = np.zeros(n_blocks, np.int64)
@@ -153,7 +200,7 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     waves: list[int] = []
     t0 = 0
     for idx in parts:
-        s = sim([traces[i] for i in idx], n_sms, prio[idx])
+        s = sim([traces[i] for i in idx], n_sms, prio[idx], rank[idx])
         sm[idx] = s.block_sm
         start[idx] = s.block_start + t0
         finish[idx] = s.block_finish + t0
@@ -168,7 +215,13 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
                     wave_cycles=np.asarray(waves, np.int64))
 
 
-def _schedule_static(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
+def _schedule_static(traces: Sequence[ProgramTrace], n_sms: int,
+                     waves: Sequence[tuple[int, ...]] | None = None
+                     ) -> Schedule:
+    """The lockstep wave schedule. ``waves`` (tuples of block indices,
+    run back to back in order) overrides the default grid-order chunks —
+    the packed static path; a packed wave never crosses a phase fence,
+    so the sequential wave order preserves the barrier semantic."""
     n_blocks = len(traces)
     sm = np.zeros(n_blocks, np.int64)
     start = np.zeros(n_blocks, np.int64)
@@ -176,13 +229,15 @@ def _schedule_static(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
     busy = np.zeros(n_blocks, np.int64)
     wait = np.zeros(n_blocks, np.int64)
     gmem = np.asarray([t.gmem_cycles for t in traces], np.int64)
-    waves = []
+    if waves is None:
+        waves = [tuple(range(w0, min(w0 + n_sms, n_blocks)))
+                 for w0 in range(0, n_blocks, n_sms)]
+    wave_cycles = []
     t0 = 0
-    for w0 in range(0, n_blocks, n_sms):
-        w1 = min(w0 + n_sms, n_blocks)
-        wave_gmem = sum(int(gmem[b]) for b in range(w0, w1))
+    for wave in waves:
+        wave_gmem = sum(int(gmem[b]) for b in wave)
         wave_c = 0
-        for i, b in enumerate(range(w0, w1)):
+        for i, b in enumerate(wave):
             # lockstep wave rule: a block's sequencer is additionally held
             # while the port drains every OTHER wave member's accesses —
             # for a homogeneous wave of n this is the classic
@@ -195,12 +250,12 @@ def _schedule_static(traces: Sequence[ProgramTrace], n_sms: int) -> Schedule:
             busy[b] = traces[b].cycles
             wait[b] = cost - busy[b]
             wave_c = max(wave_c, cost)
-        waves.append(wave_c)
+        wave_cycles.append(wave_c)
         t0 += wave_c
     return Schedule(mode="static", n_sms=n_sms, makespan=t0,
                     block_sm=sm, block_start=start, block_finish=finish,
                     block_busy=busy, block_wait=wait, block_gmem=gmem,
-                    wave_cycles=np.asarray(waves, np.int64))
+                    wave_cycles=np.asarray(wave_cycles, np.int64))
 
 
 def _segments(trace: ProgramTrace) -> list[tuple[int, int]]:
@@ -222,7 +277,8 @@ _PULL, _PORT = 0, 1
 
 
 def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int,
-                      priority: np.ndarray | None = None) -> Schedule:
+                      priority: np.ndarray | None = None,
+                      rank: np.ndarray | None = None) -> Schedule:
     n_blocks = len(traces)
     sm = np.zeros(n_blocks, np.int64)
     start = np.zeros(n_blocks, np.int64)
@@ -232,10 +288,13 @@ def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int,
 
     if priority is None:
         priority = np.zeros(n_blocks, np.int64)
-    # ready queue ordered by (priority desc, grid order): with all-equal
-    # priorities this pops in grid order — exactly the old FIFO deque
-    queue: list[tuple[int, int]] = [(-int(priority[b]), b)
-                                    for b in range(n_blocks)]
+    if rank is None:
+        rank = np.arange(n_blocks, dtype=np.int64)
+    # ready queue ordered by (priority desc, dispatch order): the FIFO
+    # tiebreak is the packed dispatch rank — grid order when no packing
+    # is in play — so all-equal priorities pop exactly that order
+    queue: list[tuple[int, int, int]] = [(-int(priority[b]), int(rank[b]),
+                                          b) for b in range(n_blocks)]
     heapq.heapify(queue)
     segs_of = [_segments(t) for t in traces]
     # per-SM cursor: current block, its segments, next segment index
@@ -266,7 +325,7 @@ def _schedule_dynamic(traces: Sequence[ProgramTrace], n_sms: int,
         if kind[s] == _PULL:
             if not queue:
                 continue                      # SM retires: queue drained
-            _, b = heapq.heappop(queue)
+            _, _, b = heapq.heappop(queue)
             cur_block[s] = b
             cur_segs[s] = segs_of[b]
             cur_i[s] = 0

@@ -136,6 +136,10 @@ def _compile_cached(words_key: tuple, cfg: SMConfig) -> TraceSchedule:
     sel_of = DATA_SEL_OF_OP
     pcs = np.asarray([t.pc for t in trace.instrs
                       if sel_of[int(t.op)] != 0], np.int64)
+    # the wave packer bins on trace.data_steps; it must equal the rows
+    # lowered here or "length" packing minimizes the wrong metric
+    assert pcs.size == trace.data_steps, \
+        "cycles.ProgramTrace.data_steps disagrees with DATA_SEL_OF_OP"
     # every data pc addresses a real program word (STOP padding is control)
     assert pcs.size == 0 or pcs.max() < len(words_key), \
         "data instruction issued from STOP-padded I-MEM"
@@ -255,6 +259,34 @@ class MergedTraceSchedule:
         merge's padding overhead."""
         return sum(self.n_steps - self.parts[int(s)].n_steps
                    for s in slot_idx)
+
+
+def merge_profile(per_wave: list, policy: str) -> dict:
+    """Aggregate the per-wave merge records into the
+    ``LaunchResult.profile()["trace_merge"]`` dict.
+
+    ``per_wave`` entries carry each wave's ``scan_steps`` (merged
+    schedule rows), ``width`` (members) and ``padded_steps`` (masked
+    no-op rows of members shorter than the wave's longest participant).
+    ``policy`` is the RESOLVED wave-packing policy that chose the
+    membership (``core.packing``). ``pad_overhead_total`` is the
+    launch-level aggregate the packer minimizes: the total padded scan
+    steps summed over every merged wave (the per-wave ``padded_steps``
+    aggregated); ``pad_overhead`` is that total as a fraction of all
+    scheduled scan rows.
+    """
+    scanned = sum(w["scan_steps"] * w["width"] for w in per_wave)
+    padded = sum(w["padded_steps"] for w in per_wave)
+    return {
+        "policy": policy,
+        "n_waves": len(per_wave),
+        "scan_steps": scanned,          # scheduled scan rows x width
+        "pad_overhead_total": padded,   # masked no-op rows of those —
+                                        # the launch-level aggregate of
+                                        # the per-wave padded_steps
+        "pad_overhead": (padded / scanned) if scanned else 0.0,
+        "per_wave": per_wave,
+    }
 
 
 @functools.lru_cache(maxsize=256)

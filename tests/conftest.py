@@ -36,6 +36,11 @@ def pytest_configure(config):
         "conformance: engine x schedule x backend x n_sms cross-engine "
         "conformance matrix (CI runs it standalone via "
         "`pytest -m conformance`)")
+    config.addinivalue_line(
+        "markers",
+        "packing: wave-packing property suite — pad-minimality, "
+        "packing-invariance, dynamic<=static under the packed wave rule "
+        "(CI runs it standalone via `pytest -m packing`)")
 
 try:
     import hypothesis  # noqa: F401

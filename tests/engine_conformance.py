@@ -1,10 +1,12 @@
-"""Declarative conformance cases for the engine x schedule x backend x
-n_sms cube.
+"""Declarative conformance cases for the packing x engine x schedule x
+backend x n_sms cube.
 
 One table (``CASES``) names every golden program plus the heterogeneous
 grids; ``tests/test_conformance.py`` sweeps each case over the full cube
 and asserts bit-identity of the trace engine against the step machine —
-the differential oracle — at the same (schedule, backend, n_sms) point.
+the differential oracle — at the same (schedule, n_sms, packing) point,
+and ARCHITECTURAL identity of every packed cell against the grid-order
+oracle (wave packing may change timing, never observable state).
 Workload sizes are deliberately tiny: the Pallas backend runs the whole
 sweep through the kernel interpreter, so every case must stay CI-sized.
 
@@ -26,61 +28,73 @@ from repro.core.assembler import assemble, auto_nop
 class ConformanceCase:
     """One launch, parameterized over the conformance cube axes."""
 
-    build: Callable[..., LaunchResult]  # (engine, schedule, backend, n_sms)
+    build: Callable[..., LaunchResult]  # (engine, schedule, backend,
+                                        #  n_sms, packing)
     heterogeneous: bool = False         # mixed grid (merged trace waves)
     pallas_sms: tuple[int, ...] = (1, 2)  # n_sms swept under the (slow)
                                           # Pallas interpreter; inline
                                           # sweeps the full axis
+    packings: tuple[str, ...] = ("grid",)  # packing policies swept; the
+                                           # heterogeneous cases add
+                                           # "length" (homogeneous grids
+                                           # are packing-invariant by
+                                           # construction — pinned in
+                                           # tests/test_packing.py)
 
 
-def _saxpy(engine, schedule, backend, n_sms) -> LaunchResult:
+def _saxpy(engine, schedule, backend, n_sms, packing) -> LaunchResult:
     from repro.core.programs.saxpy import launch_saxpy
 
     x = np.arange(64, dtype=np.float32)
     dev = DeviceConfig(n_sms=n_sms, global_mem_depth=512, engine=engine,
-                       backend=backend, sm=SMConfig(max_steps=10_000))
+                       backend=backend, packing=packing,
+                       sm=SMConfig(max_steps=10_000))
     _, res = launch_saxpy(2.0, x, np.ones_like(x), device=dev, block=16,
                           schedule=schedule)
     return res
 
 
-def _reduction_fused(engine, schedule, backend, n_sms) -> LaunchResult:
+def _reduction_fused(engine, schedule, backend, n_sms,
+                     packing) -> LaunchResult:
     # two programs + a barrier fence: stage 2 GLDs the partials stage 1
     # GSTs — the cross-block global-memory dataflow pattern merged waves
-    # must keep behind the fence
+    # must keep behind the fence (and a packed wave must never cross)
     from repro.core.programs import launch_reduction
 
     dev = DeviceConfig(n_sms=n_sms, global_mem_depth=1024, engine=engine,
-                       backend=backend, sm=SMConfig(max_steps=50_000))
+                       backend=backend, packing=packing,
+                       sm=SMConfig(max_steps=50_000))
     _, res = launch_reduction(np.arange(256, dtype=np.float32), device=dev,
                               block=64, fused=True, schedule=schedule)
     return res
 
 
-def _fft_batch(engine, schedule, backend, n_sms) -> LaunchResult:
+def _fft_batch(engine, schedule, backend, n_sms, packing) -> LaunchResult:
     from repro.core.programs.fft import run_fft_batch
 
     xs = (np.linspace(-1, 1, 3 * 32).reshape(3, 32)
           + 0.5j * np.ones((3, 32))).astype(np.complex64)
     dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       packing=packing,
                        sm=SMConfig(shmem_depth=128, max_steps=100_000))
     _, res = run_fft_batch(xs, device=dev, schedule=schedule)
     return res
 
 
-def _qrd_batch(engine, schedule, backend, n_sms) -> LaunchResult:
+def _qrd_batch(engine, schedule, backend, n_sms, packing) -> LaunchResult:
     from repro.core.programs.qrd import run_qrd_batch
 
     As = np.stack([np.eye(16, dtype=np.float32) + 0.1,
                    np.eye(16, dtype=np.float32) * 2.0])
     dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       packing=packing,
                        sm=SMConfig(shmem_depth=1024, imem_depth=1024,
                                    max_steps=200_000))
     _, _, res = run_qrd_batch(As, device=dev, schedule=schedule)
     return res
 
 
-def _mixed_fft_qrd(engine, schedule, backend, n_sms,
+def _mixed_fft_qrd(engine, schedule, backend, n_sms, packing,
                    interleave=True, priorities=None) -> LaunchResult:
     from repro.core.programs.mixed import launch_fft_qrd, mixed_device
 
@@ -90,7 +104,7 @@ def _mixed_fft_qrd(engine, schedule, backend, n_sms,
     As = np.stack([np.eye(16, dtype=np.float32) + 0.05])
     _, _, _, res = launch_fft_qrd(xs, As, device=dev, schedule=schedule,
                                   interleave=interleave,
-                                  priorities=priorities)
+                                  priorities=priorities, packing=packing)
     return res
 
 
@@ -106,7 +120,8 @@ _OVR_PROG = """
 """
 
 
-def _mixed_overrides(engine, schedule, backend, n_sms) -> LaunchResult:
+def _mixed_overrides(engine, schedule, backend, n_sms,
+                     packing) -> LaunchResult:
     # per-Kernel imem/shmem overrides INSIDE one heterogeneous grid: the
     # small kernel traps stores >= 24 and pads back to the device depth;
     # every GST writes value == address - 64, so colliding writers are
@@ -121,22 +136,28 @@ def _mixed_overrides(engine, schedule, backend, n_sms) -> LaunchResult:
                        backend=backend,
                        sm=SMConfig(shmem_depth=64, max_steps=5_000))
     return launch(dev, programs=kerns, grid_map=[0, 1, 1, 0, 1],
-                  schedule=schedule)
+                  schedule=schedule, packing=packing)
 
+
+_HET_PACKINGS = ("grid", "length")
 
 CASES: dict[str, ConformanceCase] = {
     "saxpy64_b16": ConformanceCase(_saxpy),
     "reduction256_fused": ConformanceCase(_reduction_fused,
-                                          heterogeneous=True),
+                                          heterogeneous=True,
+                                          packings=_HET_PACKINGS),
     "fft32_batch3": ConformanceCase(_fft_batch),
     "qrd16_batch2": ConformanceCase(_qrd_batch, pallas_sms=(2,)),
-    "mixed_fft_qrd": ConformanceCase(_mixed_fft_qrd, heterogeneous=True),
+    "mixed_fft_qrd": ConformanceCase(_mixed_fft_qrd, heterogeneous=True,
+                                     packings=_HET_PACKINGS),
     "mixed_backloaded_prio": ConformanceCase(
-        lambda e, s, b, n: _mixed_fft_qrd(e, s, b, n, interleave=False,
-                                          priorities=(0, 1)),
-        heterogeneous=True, pallas_sms=(2,)),
+        lambda e, s, b, n, p: _mixed_fft_qrd(e, s, b, n, p,
+                                             interleave=False,
+                                             priorities=(0, 1)),
+        heterogeneous=True, pallas_sms=(2,), packings=_HET_PACKINGS),
     "mixed_overrides": ConformanceCase(_mixed_overrides,
-                                       heterogeneous=True),
+                                       heterogeneous=True,
+                                       packings=_HET_PACKINGS),
 }
 
 ENGINES = ("step", "trace")
@@ -146,21 +167,40 @@ N_SMS = (1, 2, 4)
 
 
 def cube(backend: str):
-    """The (case, schedule, n_sms) cells swept for one backend."""
+    """The (case, schedule, n_sms, packing) cells swept for one backend.
+
+    The Pallas interpreter is slow, so its packed ("length") cells run
+    only at the case's widest ``pallas_sms`` point — the inline sweep
+    covers the full axis, and packed Pallas cells add backend coverage,
+    not packing coverage.
+    """
     for name, case in CASES.items():
-        sms = N_SMS if backend == "inline" else case.pallas_sms
-        for schedule in SCHEDULES:
-            for n_sms in sms:
-                yield name, schedule, n_sms
+        for packing in case.packings:
+            if backend == "inline":
+                sms = N_SMS
+            else:
+                sms = case.pallas_sms if packing == "grid" \
+                    else case.pallas_sms[-1:]
+            for schedule in SCHEDULES:
+                for n_sms in sms:
+                    yield name, schedule, n_sms, packing
 
 
-def assert_bit_identical(a: LaunchResult, b: LaunchResult) -> None:
-    """Full architectural + counter equality of two launches."""
+def assert_arch_identical(a: LaunchResult, b: LaunchResult) -> None:
+    """Architectural (observable-state) equality of two launches: every
+    register, shared-memory and global-memory word, the OOB flags, and
+    halting. Cycle counters are deliberately NOT compared — wave packing
+    legitimately changes modeled timing, never state."""
     np.testing.assert_array_equal(np.asarray(a.regs), np.asarray(b.regs))
     np.testing.assert_array_equal(np.asarray(a.shmem), np.asarray(b.shmem))
     np.testing.assert_array_equal(np.asarray(a.gmem), np.asarray(b.gmem))
     np.testing.assert_array_equal(np.asarray(a.oob), np.asarray(b.oob))
     assert a.halted == b.halted
+
+
+def assert_bit_identical(a: LaunchResult, b: LaunchResult) -> None:
+    """Full architectural + counter equality of two launches."""
+    assert_arch_identical(a, b)
     assert a.cycles == b.cycles and a.steps == b.steps
     assert list(a.wave_cycles) == list(b.wave_cycles)
     assert list(np.asarray(a.cycles_by_class)) \

@@ -1,11 +1,15 @@
 """Cross-engine conformance matrix: every case of
-``tests/engine_conformance.py`` swept over the engine x schedule x
-backend x n_sms cube, asserted bit-identical against the inline step
-machine — the differential oracle both engines and both backends must
-match at the same (schedule, n_sms) point. Comparing every cell against
-ONE oracle makes the matrix transitive: inline-trace, pallas-step and
-pallas-trace all collapse onto the same architectural state, so any
-engine/backend drift anywhere in the cube fails here.
+``tests/engine_conformance.py`` swept over the packing x engine x
+schedule x backend x n_sms cube, asserted bit-identical against the
+inline step machine — the differential oracle both engines and both
+backends must match at the same (schedule, n_sms, packing) point.
+Comparing every cell against ONE oracle makes the matrix transitive:
+inline-trace, pallas-step and pallas-trace all collapse onto the same
+architectural state, so any engine/backend drift anywhere in the cube
+fails here. Packed ("length") cells additionally assert ARCHITECTURAL
+identity against the grid-order oracle: wave packing may change which
+blocks share a wave (and with it the modeled timing), never observable
+state.
 
 A hypothesis fuzz extends the table with random legal heterogeneous
 grids (random program mix, grid_map, block sizes, priorities). The fuzz
@@ -29,6 +33,7 @@ from repro.core.isa import Depth, Instr, Op, Typ, Width
 from engine_conformance import (
     BACKENDS,
     CASES,
+    assert_arch_identical,
     assert_bit_identical,
     cube,
 )
@@ -38,37 +43,53 @@ pytestmark = pytest.mark.conformance
 _ORACLE_CACHE: dict = {}
 
 
-def _oracle(name, schedule, n_sms):
+def _oracle(name, schedule, n_sms, packing="grid"):
     """The inline step machine's result for one cell (cached per module:
-    every cube cell of a case shares its oracle)."""
-    key = (name, schedule, n_sms)
+    every cube cell of a case shares its oracle). Packed cells get a
+    packing-matched oracle — the step machine's timing consumes the same
+    wave packing — and additionally compare architectural state against
+    the grid-order oracle."""
+    key = (name, schedule, n_sms, packing)
     if key not in _ORACLE_CACHE:
         _ORACLE_CACHE[key] = CASES[name].build("step", schedule, "inline",
-                                               n_sms)
+                                               n_sms, packing)
     return _ORACLE_CACHE[key]
 
 
 def _cells():
     for backend in BACKENDS:
-        for name, schedule, n_sms in cube(backend):
+        for name, schedule, n_sms, packing in cube(backend):
             engines = ("trace",) if backend == "inline" \
                 else ("step", "trace")
             for engine in engines:
-                yield name, schedule, backend, n_sms, engine
+                yield name, schedule, backend, n_sms, engine, packing
 
 
-@pytest.mark.parametrize("name,schedule,backend,n_sms,engine",
+@pytest.mark.parametrize("name,schedule,backend,n_sms,engine,packing",
                          list(_cells()))
-def test_conformance_cube(name, schedule, backend, n_sms, engine):
+def test_conformance_cube(name, schedule, backend, n_sms, engine, packing):
     case = CASES[name]
-    res = case.build(engine, schedule, backend, n_sms)
+    res = case.build(engine, schedule, backend, n_sms, packing)
     assert res.engine == engine and res.schedule == schedule
+    assert res.packing == packing
     if engine == "trace" and case.heterogeneous:
         # the merged heterogeneous path must actually be the one running
         merge = res.profile().get("trace_merge")
         assert merge and merge["n_waves"] >= 1
         assert merge["pad_overhead"] >= 0.0
-    assert_bit_identical(res, _oracle(name, schedule, n_sms))
+        assert merge["policy"] == packing
+        # the launch-level aggregate really aggregates the per-wave stats
+        assert merge["pad_overhead_total"] == \
+            sum(w["padded_steps"] for w in merge["per_wave"])
+    # full bit-identity (state + counters) against the packing-matched
+    # step-inline oracle: both engines and backends agree on the waves
+    # that actually ran
+    assert_bit_identical(res, _oracle(name, schedule, n_sms, packing))
+    if packing != "grid":
+        # the packing-invariance contract: packed cells are
+        # architecturally identical to the GRID-ORDER oracle — packing
+        # changes which blocks share a wave, never observable state
+        assert_arch_identical(res, _oracle(name, schedule, n_sms))
 
 
 # ---------------------------------------------------------------------------
@@ -78,7 +99,8 @@ def test_conformance_cube(name, schedule, backend, n_sms, engine):
 def test_trace_on_mixed_grid_runs_merged_not_fallback():
     # the PR-3 engine ran mixed grids as per-program homogeneous waves;
     # engine="trace" must now take the merged heterogeneous path and say so
-    res = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2)
+    res = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2,
+                                       "grid")
     assert res.engine == "trace" and res.engine_fallback is None
     merge = res.profile()["trace_merge"]
     assert merge["n_waves"] >= 1 and merge["scan_steps"] > 0
@@ -86,6 +108,27 @@ def test_trace_on_mixed_grid_runs_merged_not_fallback():
     assert any(len(w["programs"]) > 1 for w in merge["per_wave"])
     # padding accounting: no-op rows never exceed scheduled rows
     assert 0.0 <= merge["pad_overhead"] < 1.0
+    # per-wave pad stats + the launch-level aggregate agree
+    assert merge["pad_overhead_total"] == \
+        sum(w["padded_steps"] for w in merge["per_wave"])
+    for w in merge["per_wave"]:
+        assert 0.0 <= w["pad_overhead"] < 1.0
+
+
+def test_length_packing_reduces_interleaved_merge_padding():
+    # the interleaved FFT+QRD grid is the pad-adversarial shape: grid
+    # order pairs every short FFT schedule with the long QRD one, so
+    # every wave pads the FFT members; length packing segregates them
+    grid = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2,
+                                        "grid")
+    packed = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2,
+                                          "length")
+    g = grid.profile()["trace_merge"]
+    p = packed.profile()["trace_merge"]
+    assert p["policy"] == "length" and g["policy"] == "grid"
+    assert p["pad_overhead_total"] <= g["pad_overhead_total"]
+    assert p["pad_overhead"] <= g["pad_overhead"]
+    assert_arch_identical(packed, grid)
 
 
 def test_auto_engine_fallback_is_profile_visible():
@@ -101,9 +144,19 @@ def test_auto_engine_fallback_is_profile_visible():
 
 
 def test_auto_engine_merges_mixed_grids():
-    res = CASES["mixed_fft_qrd"].build("auto", "auto", "inline", 2)
+    res = CASES["mixed_fft_qrd"].build("auto", "auto", "inline", 2, "grid")
     assert res.engine == "trace" and res.engine_fallback is None
     assert res.trace_merge is not None
+
+
+def test_auto_packing_resolves_length_on_mixed_grids():
+    res = CASES["mixed_fft_qrd"].build("trace", "dynamic", "inline", 2,
+                                       "auto")
+    assert res.packing == "length"
+    assert res.profile()["trace_merge"]["policy"] == "length"
+    # homogeneous grids resolve to grid — packing stays a no-op there
+    res = CASES["saxpy64_b16"].build("trace", "static", "inline", 2, "auto")
+    assert res.packing == "grid"
 
 
 def test_forced_trace_merges_fuel_limited_mixed_grid():
@@ -172,8 +225,10 @@ def _random_grid(draw):
 @settings(max_examples=25, deadline=None)
 @given(grid=_random_grid(), seed=st.integers(0, 2**31 - 1),
        n_sms=st.integers(1, 3),
-       schedule=st.sampled_from(["static", "dynamic"]))
-def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule):
+       schedule=st.sampled_from(["static", "dynamic"]),
+       packing=st.sampled_from(["grid", "length", "auto"]))
+def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule,
+                                             packing):
     progs, blocks, prios, gmap = grid
     rng = np.random.default_rng(seed)
     gmem = rng.standard_normal(64).astype(np.float32)
@@ -191,7 +246,7 @@ def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule):
             dcfg, programs=kerns, grid_map=gmap, gmem=gmem,
             shmem=[shmems[k] if (np.asarray(gmap) == k).any() else None
                    for k in range(len(progs))],
-            schedule=schedule)
+            schedule=schedule, packing=packing)
     if len(set(gmap)) > 1:
         assert outs["trace"].trace_merge is not None
     assert_bit_identical(outs["step"], outs["trace"])

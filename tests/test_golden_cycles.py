@@ -75,14 +75,18 @@ def _qrd_batch(n_sms):
     return res
 
 
-def _mixed(schedule, priorities=None, interleave=True, engine=None):
+def _mixed(schedule, priorities=None, interleave=True, engine=None,
+           n_sms=None, packing=None):
     from repro.core.programs import launch_fft_qrd
+    from repro.core.programs.mixed import mixed_device
 
     xs = np.ones((6, 64), np.complex64)
     As = np.stack([np.eye(16, dtype=np.float32)] * 3)
-    _, _, _, res = launch_fft_qrd(xs, As, schedule=schedule,
+    device = mixed_device(64, n_sms=n_sms) if n_sms is not None else None
+    _, _, _, res = launch_fft_qrd(xs, As, device=device, schedule=schedule,
                                   priorities=priorities,
-                                  interleave=interleave, engine=engine)
+                                  interleave=interleave, engine=engine,
+                                  packing=packing)
     return res
 
 
@@ -108,15 +112,40 @@ CASES["mixed_fft_qrd[4sm,dynamic,trace-engine]"] = \
     lambda: _mixed("dynamic", engine="trace")
 CASES["mixed_fft_qrd[4sm,static,trace-engine]"] = \
     lambda: _mixed("static", engine="trace")
+# packed-mixed entries (wave packing is OPT-IN: every grid-order entry
+# above must stay byte-identical — a default-packing launch never sees
+# the packer). The backloaded grid is the pad-adversarial shape; pinning
+# BOTH engines pins that timing stays engine-independent under packing.
+for _n in (1, 2, 4):
+    for _e in ("step", "trace"):
+        CASES[f"mixed_fft_qrd[{_n}sm,dynamic,packed,{_e}-engine]"] = \
+            (lambda n=_n, e=_e: _mixed("dynamic", engine=e, n_sms=n,
+                                       interleave=False,
+                                       packing="length"))
+        CASES[f"mixed_fft_qrd[{_n}sm,static,packed,{_e}-engine]"] = \
+            (lambda n=_n, e=_e: _mixed("static", engine=e, n_sms=n,
+                                       interleave=False,
+                                       packing="length"))
 
 
+@pytest.mark.parametrize("packing", [None, "length"])
 @pytest.mark.parametrize("schedule", ["static", "dynamic"])
-def test_heterogeneous_trace_engine_reports_step_cycle_totals(schedule):
-    tr, st = _mixed(schedule, engine="trace"), _mixed(schedule,
-                                                      engine="step")
+def test_heterogeneous_trace_engine_reports_step_cycle_totals(schedule,
+                                                              packing):
+    tr = _mixed(schedule, engine="trace", packing=packing)
+    st = _mixed(schedule, engine="step", packing=packing)
     assert tr.engine == "trace" and tr.trace_merge is not None
     assert st.engine == "step"
     assert _record(tr) == _record(st)
+
+
+def test_packing_is_opt_in_stable():
+    # an explicit packing="grid" is byte-identical to the default — the
+    # packer's presence alone never moves a golden number
+    assert _record(_mixed("static", packing="grid")) \
+        == _record(_mixed("static"))
+    assert _record(_mixed("dynamic", packing="grid")) \
+        == _record(_mixed("dynamic"))
 
 
 @pytest.fixture(scope="module")

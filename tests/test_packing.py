@@ -1,0 +1,373 @@
+"""Wave-packing property suite (``pytest -m packing``, own CI job).
+
+The packing-invariance contract, property-tested:
+
+  (a) the "length" policy NEVER yields more total padded scan steps than
+      grid packing (it is DP-optimal over all partitions into the same
+      number of waves of width <= n_sms);
+  (b) every block appears in exactly one wave, and a wave never crosses
+      a ``Kernel(barrier=True)`` phase fence;
+  (c) single-program grids are packing-invariant in cycles too — the
+      stable length sort of an all-equal phase reproduces grid chunking
+      exactly, so the launch is BIT-identical, counters included;
+
+plus the scheduler-level acceptance bound: ``dynamic <= static`` keeps
+holding when both disciplines consume the same packing (the dynamic
+queue pops the packed order; the static waves chunk it), fuzzed over
+random trace sets, lengths, phases and policies.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DeviceConfig,
+    Kernel,
+    SMConfig,
+    assemble,
+    launch,
+    pack_waves,
+    program_trace,
+    schedule_blocks,
+)
+from repro.core.assembler import auto_nop
+from repro.core.isa import Depth, Instr, Op, Typ, Width
+from repro.core.packing import PACKINGS
+
+from engine_conformance import assert_arch_identical, assert_bit_identical
+
+pytestmark = pytest.mark.packing
+
+
+# ---------------------------------------------------------------------------
+# pack_waves unit tests: policies and bin-packing edge cases
+# ---------------------------------------------------------------------------
+
+def test_grid_policy_chunks_grid_order():
+    p = pack_waves([7, 1, 9, 2, 5], 2, "grid")
+    assert p.policy == "grid"
+    assert p.waves == ((0, 1), (2, 3), (4,))
+    assert list(p.order) == [0, 1, 2, 3, 4]
+    assert p.wave_phase == (0, 0, 0)
+
+
+def test_length_all_equal_matches_grid():
+    # the all-equal edge case: the stable sort is the identity, the DP's
+    # widest-first tiebreak keeps grid-shaped chunks — "length" and
+    # "grid" coincide exactly (this is what makes single-program grids
+    # packing-invariant by construction)
+    for n, m in [(1, 1), (5, 2), (7, 3), (8, 4), (3, 8)]:
+        g = pack_waves([6] * n, m, "grid")
+        p = pack_waves([6] * n, m, "length")
+        assert p.waves == g.waves, (n, m)
+
+
+def test_length_isolates_straggler():
+    # one long straggler: grid pads two short blocks to it; the DP gives
+    # it a wave of its own (narrower than n_sms) and zeroes the padding
+    g = pack_waves([10, 1, 1], 2, "grid")
+    p = pack_waves([10, 1, 1], 2, "length")
+    assert g.pad_steps() == 9
+    assert p.waves == ((0,), (1, 2)) and p.pad_steps() == 0
+    assert p.n_waves == g.n_waves          # same wave count, better waves
+    assert min(p.wave_sizes) < p.n_sms     # a mid-sequence narrow wave
+
+
+def test_length_keeps_wide_waves_when_that_pads_less():
+    # the mirror-image case: isolating the tail would PAD MORE — the DP
+    # must keep the grid-shaped split (boundary choice is data-dependent)
+    p = pack_waves([3, 3, 2], 2, "length")
+    assert p.waves == ((0, 1), (2,)) and p.pad_steps() == 0
+
+
+def test_phase_narrower_than_n_sms_is_one_wave():
+    p = pack_waves([4, 2], 8, "length")
+    assert p.waves == ((0, 1),) and p.wave_sizes == (2,)
+
+
+def test_length_sort_is_stable_within_equal_lengths():
+    # equal lengths keep grid order (program-local BID order within a
+    # slot is part of the merged-wave contract)
+    p = pack_waves([5, 9, 5, 9, 5], 2, "length")
+    assert list(p.order) == [1, 3, 0, 2, 4]
+
+
+def test_waves_never_cross_phases():
+    # pairing the two 9s would zero the padding, but they sit on opposite
+    # sides of a fence — the packer must not reach across it
+    p = pack_waves([9, 1, 1, 9], 2, "length", phase_of=[0, 0, 1, 1])
+    assert p.wave_phase == (0, 1)
+    assert p.waves == ((0, 1), (3, 2))
+    assert p.pad_steps() == 16
+    assert pack_waves([9, 1, 1, 9], 2, "length").pad_steps() == 0
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="packing"):
+        pack_waves([1, 2], 2, "shortest-job-first")
+    with pytest.raises(ValueError, match="n_sms"):
+        pack_waves([1, 2], 0, "grid")
+    with pytest.raises(ValueError, match="non-empty"):
+        pack_waves([], 2, "grid")
+    with pytest.raises(ValueError, match="phase_of"):
+        pack_waves([1, 2], 2, "grid", phase_of=[0])
+    with pytest.raises(ValueError, match="packing"):
+        DeviceConfig(packing="by-vibes")
+
+
+def test_scheduler_rejects_inconsistent_packing():
+    words = np.array([Instr(op=Op.STOP).encode()], np.int64)
+    traces = [program_trace(words, 16)] * 4
+    for mode in ("static", "dynamic"):
+        # wrong block count
+        with pytest.raises(ValueError, match="covers"):
+            schedule_blocks(traces, 2, mode,
+                            packing=pack_waves([1, 1], 2, "grid"))
+        # wrong SM count
+        with pytest.raises(ValueError, match="SMs"):
+            schedule_blocks(traces, 2, mode,
+                            packing=pack_waves([1] * 4, 4, "grid"))
+        # a packing built without the schedule's fences: its waves span
+        # (or reorder) the declared phases
+        with pytest.raises(ValueError, match="spans barrier"):
+            schedule_blocks(traces, 2, mode, phase_of=[0, 1, 1, 1],
+                            packing=pack_waves([1] * 4, 2, "grid"))
+
+
+def test_auto_resolves_length_only_for_mixed_lengths():
+    assert pack_waves([5, 5, 5], 2, "auto").policy == "grid"
+    assert pack_waves([5, 1, 5], 2, "auto").policy == "length"
+    # mixing across phases but uniform within each stays grid: there is
+    # nothing for the packer to win inside any phase
+    assert pack_waves([5, 5, 1, 1], 2, "auto",
+                      phase_of=[0, 0, 1, 1]).policy == "grid"
+
+
+# ---------------------------------------------------------------------------
+# the hypothesis properties
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _packing_problem(draw):
+    n = draw(st.integers(1, 16))
+    lengths = [draw(st.integers(0, 40)) for _ in range(n)]
+    n_sms = draw(st.integers(1, 6))
+    n_phases = draw(st.integers(1, 3))
+    # deliberately UNSORTED: launch() derives block_phase from grid_map,
+    # and a grid interleaving a barrier kernel's blocks with earlier
+    # kernels' produces out-of-order phase vectors
+    phase = [draw(st.integers(0, n_phases - 1)) for _ in range(n)]
+    return lengths, n_sms, phase
+
+
+@settings(max_examples=300, deadline=None)
+@given(prob=_packing_problem(), policy=st.sampled_from(PACKINGS))
+def test_packing_partition_and_pad_properties(prob, policy):
+    lengths, n_sms, phase = prob
+    p = pack_waves(lengths, n_sms, policy, phase_of=phase)
+    g = pack_waves(lengths, n_sms, "grid", phase_of=phase)
+    # (b) exact partition: every block in exactly one wave
+    flat = [b for wave in p.waves for b in wave]
+    assert sorted(flat) == list(range(len(lengths)))
+    assert all(len(w) <= n_sms and len(w) >= 1 for w in p.waves)
+    # (b) waves never cross a phase fence, and phases stay in order
+    for wave, ph in zip(p.waves, p.wave_phase):
+        assert all(phase[b] == ph for b in wave)
+    assert list(p.wave_phase) == sorted(p.wave_phase)
+    # same wave count as grid packing (per phase, hence in total)
+    assert p.n_waves == g.n_waves
+    # (a) length packing never pads more than grid packing
+    assert pack_waves(lengths, n_sms, "length",
+                      phase_of=phase).pad_steps() <= g.pad_steps()
+    # the dispatch order is a permutation consistent with the waves
+    assert sorted(p.order) == list(range(len(lengths)))
+
+
+def _random_traces(draw):
+    ops = st.sampled_from([Op.ADD, Op.MUL, Op.LODI, Op.TDX, Op.NOP,
+                           Op.LOD, Op.STO, Op.GLD, Op.GST, Op.DOT])
+    word = st.builds(
+        lambda op, typ, w, d: Instr(
+            op=op, typ=typ, rd=1, ra=2, rb=3, width=w, depth=d),
+        ops, st.sampled_from(list(Typ)), st.sampled_from(list(Width)),
+        st.sampled_from(list(Depth)))
+    n_programs = draw(st.integers(1, 3))
+    progs = []
+    for _ in range(n_programs):
+        instrs = draw(st.lists(word, min_size=1, max_size=12))
+        instrs.append(Instr(op=Op.STOP))
+        n_threads = draw(st.sampled_from([16, 64, 256]))
+        progs.append(program_trace(
+            np.array([i.encode() for i in instrs], np.int64), n_threads))
+    gmap = draw(st.lists(st.integers(0, n_programs - 1),
+                         min_size=1, max_size=12))
+    return [progs[k] for k in gmap]
+
+
+@st.composite
+def _schedule_problem(draw):
+    traces = _random_traces(draw)
+    n = len(traces)
+    n_sms = draw(st.integers(1, 5))
+    lengths = [draw(st.integers(0, 30)) for _ in range(n)]
+    # unsorted on purpose — see _packing_problem
+    phase = [draw(st.integers(0, 1)) for _ in range(n)]
+    policy = draw(st.sampled_from(PACKINGS))
+    return traces, n_sms, lengths, phase, policy
+
+
+@settings(max_examples=200, deadline=None)
+@given(prob=_schedule_problem())
+def test_dynamic_never_slower_than_static_under_same_packing(prob):
+    """The PR-2 acceptance bound survives packing: list dispatch in the
+    packed order never loses to serial waves chunked from that same
+    order (the packed wave rule charges every member the whole wave's
+    port drain). The packing here is adversarial — the lengths fed to
+    the packer are arbitrary, not the traces' own — because the bound
+    must hold for ANY phase-respecting membership, not just pad-optimal
+    ones."""
+    traces, n_sms, lengths, phase, policy = prob
+    wp = pack_waves(lengths, n_sms, policy, phase_of=phase)
+    stat = schedule_blocks(traces, n_sms, "static", phase_of=phase,
+                           packing=wp)
+    dyn = schedule_blocks(traces, n_sms, "dynamic", phase_of=phase,
+                          packing=wp)
+    for s in (stat, dyn):
+        assert s.block_sm.shape == (len(traces),)
+        assert int(s.sm_blocks.sum()) == len(traces)
+        np.testing.assert_array_equal(
+            s.block_finish, s.block_start + s.block_busy + s.block_wait)
+        assert (s.block_finish <= s.makespan).all()
+        assert (s.sm_idle >= 0).all()
+    assert len(stat.wave_cycles) == wp.n_waves
+    assert dyn.makespan <= stat.makespan
+
+
+@settings(max_examples=150, deadline=None)
+@given(prob=_schedule_problem())
+def test_grid_packing_is_bit_identical_to_no_packing(prob):
+    """packing=None and an explicit grid WavePacking are the same
+    scheduler — packing is opt-in, never a silent timing change."""
+    traces, n_sms, _, phase, _ = prob
+    wp = pack_waves([t.steps for t in traces], n_sms, "grid",
+                    phase_of=phase)
+    for mode in ("static", "dynamic"):
+        a = schedule_blocks(traces, n_sms, mode, phase_of=phase)
+        b = schedule_blocks(traces, n_sms, mode, phase_of=phase,
+                            packing=wp)
+        assert a.makespan == b.makespan
+        for f in ("block_sm", "block_start", "block_finish", "block_busy",
+                  "block_wait", "block_gmem", "wave_cycles"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+# ---------------------------------------------------------------------------
+# launch-level invariance
+# ---------------------------------------------------------------------------
+
+def _dcfg(n_sms, packing, **sm_kw):
+    sm_kw.setdefault("max_steps", 5000)
+    sm_kw.setdefault("shmem_depth", 64)
+    return DeviceConfig(n_sms=n_sms, global_mem_depth=128,
+                        packing=packing, sm=SMConfig(**sm_kw))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_blocks=st.integers(1, 7),
+       n_sms=st.integers(1, 4),
+       schedule=st.sampled_from(["static", "dynamic"]))
+def test_single_program_grids_are_packing_invariant_in_cycles(
+        seed, n_blocks, n_sms, schedule):
+    """Property (c): one program means all-equal schedule lengths, so
+    every policy reproduces the grid waves — the whole LaunchResult,
+    cycle counters included, is bit-identical."""
+    rng = np.random.default_rng(seed)
+    ops = [Op.ADD, Op.MUL, Op.LODI, Op.TDX, Op.BID, Op.LOD, Op.STO,
+           Op.GLD, Op.GST]
+    instrs = [Instr(op=ops[int(rng.integers(0, len(ops)))],
+                    typ=Typ(int(rng.integers(0, 3))),
+                    rd=int(rng.integers(0, 16)), ra=0,
+                    rb=int(rng.integers(0, 16)),
+                    imm=int(rng.integers(0, 16)),
+                    width=Width(int(rng.integers(0, 4))),
+                    depth=Depth(int(rng.integers(0, 4))))
+              for _ in range(int(rng.integers(1, 10)))]
+    instrs.append(Instr(op=Op.STOP))
+    words = np.array([i.encode() for i in instrs], np.int64)
+    gmem = rng.standard_normal(128).astype(np.float32)
+    outs = {}
+    for packing in ("grid", "length", "auto"):
+        outs[packing] = launch(_dcfg(n_sms, packing, max_steps=200),
+                               words, grid=(n_blocks,), block=16,
+                               gmem=gmem, schedule=schedule)
+    # "auto" must resolve to grid on a single-program grid
+    assert outs["auto"].packing == "grid"
+    assert_bit_identical(outs["grid"], outs["length"])
+    assert_bit_identical(outs["grid"], outs["auto"])
+
+
+_LONG = """
+    BID R1
+    LOD R2, #3
+    INIT 12
+top:
+    ADD.INT32 R2, R2, R2
+    STO R2, (R1)+0
+    LOOP top
+    STOP
+"""
+_SHORT = """
+    BID R1
+    PID R2
+    ADD.INT32 R3, R1, R2
+    STO R3, (R1)+1
+    STOP
+"""
+
+
+def _mixed_launch(packing, schedule="dynamic", n_sms=2, engine=None,
+                  barrier=False):
+    long_p = assemble(auto_nop(_LONG, 16)).words
+    short_p = assemble(auto_nop(_SHORT, 16)).words
+    kerns = [Kernel(long_p, block=16, name="long"),
+             Kernel(short_p, block=16, name="short",
+                    barrier=barrier)]
+    # backloaded-with-remainder grid: grid order pads short blocks
+    # against the long ones in the straddling wave
+    gmap = [0, 0, 0, 1, 1, 1, 1]
+    return launch(_dcfg(n_sms, packing), programs=kerns, grid_map=gmap,
+                  schedule=schedule, engine=engine)
+
+
+def test_packed_launch_is_arch_identical_and_pads_less():
+    grid = _mixed_launch("grid", engine="trace")
+    packed = _mixed_launch("length", engine="trace")
+    assert_arch_identical(grid, packed)
+    g, p = grid.trace_merge, packed.trace_merge
+    assert p["pad_overhead_total"] < g["pad_overhead_total"]
+    assert p["policy"] == "length"
+    # dynamic <= static holds against the PACKED static baseline
+    assert packed.cycles <= packed.static_cycles
+    assert grid.cycles <= grid.static_cycles
+
+
+def test_packed_waves_respect_barrier_at_launch_level():
+    res = _mixed_launch("length", barrier=True)
+    wp = res.wave_packing
+    phase = np.asarray([0, 0, 0, 1, 1, 1, 1])
+    for wave, ph in zip(wp.waves, wp.wave_phase):
+        assert all(phase[b] == ph for b in wave)
+    # the timing layer honors the fence under packing: every barrier-side
+    # block starts after every pre-fence block retired
+    t = res.timing
+    fence = max(int(c) for c in t.block_finish[:3])
+    assert all(int(t.block_start[b]) >= fence for b in range(3, 7))
+
+
+def test_packed_step_and_trace_engines_report_identical_records():
+    # timing is engine-independent under packing too
+    a = _mixed_launch("length", engine="step", schedule="static")
+    b = _mixed_launch("length", engine="trace", schedule="static")
+    assert a.engine == "step" and b.engine == "trace"
+    assert_bit_identical(a, b)
