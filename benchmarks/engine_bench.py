@@ -1,18 +1,28 @@
-"""Step-machine vs trace-engine wall-clock benchmark.
+"""Step-machine vs trace-engine vs megakernel wall-clock benchmark.
 
 Runs the same launches through ``engine="step"`` (fetch/decode/dispatch
-``lax.while_loop``) and ``engine="trace"`` (decode-once ``lax.scan``,
-``core.trace_engine``) and reports wall-clock per launch, warm (compile
-and trace-lowering excluded — best of ``repeats`` after one warmup call).
-Functional bit-identity of the two engines is the test suite's job
-(``tests/test_trace_engine.py``); this file measures the speedup and
-emits ``BENCH_engine.json`` for CI to archive.
+``lax.while_loop``), ``engine="trace"`` (decode-once ``lax.scan``,
+``core.trace_engine``) and ``engine="megakernel"`` (fused segments with
+plan-time partial evaluation) and reports wall-clock per launch, warm
+(compile and trace-lowering excluded — best of ``repeats`` after one
+warmup call). Functional bit-identity of the three engines is the test
+suite's job (``tests/test_conformance.py``); this file measures the
+speedups and emits ``BENCH_engine.json`` for CI to archive.
 
 The smoke set doubles as the CI regression gate: the trace engine must
 not be slower than the step machine on the FFT and QRD batch lines, and
 must beat it by >= 1.2x on the heterogeneous FFT+QRD mixed launch — the
 merged-wave path (``trace_engine.MergedTraceSchedule``) that removed the
-last workload class excluded from the fast path.
+last workload class excluded from the fast path. The megakernel engine
+must beat the trace scan by >= 1.5x on the FFT64 and QRD16 batch lines
+(the plan-time constant folding + fused-segment dividend) and must not
+lose to it anywhere else.
+
+The cold-start line times the host-side lowering (trace walk + schedule
+decode) against an empty vs a warmed persistent compile cache
+(``core.compile_cache``), simulating a fresh process by clearing the
+in-memory LRU tiers: the warm path must load artifacts instead of
+re-tracing.
 
 The packed line compares the trace engine against ITSELF under the two
 wave-packing policies (``core.packing``) on the interleaved mixed
@@ -112,6 +122,73 @@ def _packed_line():
     return "mixed_interleaved_fft4_qrd4", fn
 
 
+def _measure_line(fn, repeats: int) -> dict:
+    """Time one launch line on all three engines."""
+    step_s = _time_launch(lambda: fn("step"), repeats)
+    trace_s = _time_launch(lambda: fn("trace"), repeats)
+    mega_s = _time_launch(lambda: fn("megakernel"), repeats)
+    return {
+        "step_us": round(step_s * 1e6, 1),
+        "trace_us": round(trace_s * 1e6, 1),
+        "mega_us": round(mega_s * 1e6, 1),
+        "speedup": round(step_s / trace_s if trace_s > 0
+                         else float("inf"), 3),
+        "mega_vs_trace": round(trace_s / mega_s if mega_s > 0
+                               else float("inf"), 3),
+    }
+
+
+def _cold_start_line(repeats: int) -> dict:
+    """Host-side lowering time, cold vs warmed persistent compile cache.
+
+    Simulates a process cold start by clearing the in-memory lowering
+    LRUs between measurements; the on-disk cache (``core.compile_cache``)
+    is the only state that survives, so the warm number is what a real
+    second process pays before its first wave."""
+    import tempfile
+
+    from repro.core import SMConfig, compile_cache, trace_engine
+    from repro.core.cycles import _trace_cached
+    from repro.core.programs.fft import fft_program
+    from repro.core.programs.qrd import qrd_program
+
+    progs = [(fft_program(64), SMConfig(shmem_depth=192,
+                                        max_steps=200_000)),
+             (qrd_program(16), SMConfig(shmem_depth=1024, imem_depth=1024,
+                                        max_steps=200_000))]
+
+    def lower_all():
+        t0 = time.perf_counter()
+        for prog, cfg in progs:
+            trace_engine.compile_program(prog, cfg)
+        return time.perf_counter() - t0
+
+    def fresh_process():
+        _trace_cached.cache_clear()
+        trace_engine.compile_cache_clear()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        try:
+            compile_cache.configure(tmp)
+            fresh_process()
+            cold_s = lower_all()          # misses: walks + stores
+            warm_s = float("inf")
+            for _ in range(max(repeats, 3)):
+                fresh_process()
+                warm_s = min(warm_s, lower_all())   # served from disk
+            stats = compile_cache.stats()
+        finally:
+            compile_cache.configure(None)
+            fresh_process()               # drop plans keyed to this run
+    return {
+        "cold_us": round(cold_s * 1e6, 1),
+        "warm_us": round(warm_s * 1e6, 1),
+        "speedup": round(cold_s / warm_s if warm_s > 0
+                         else float("inf"), 3),
+        "cache": stats,
+    }
+
+
 def _measure_packed(fn, repeats: int) -> dict:
     # the two policies differ by ~10-25% on this line, within reach of
     # shared-runner jitter for small repeat counts — the launches are
@@ -131,16 +208,16 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
     repeats = 3 if smoke else 5
     results: dict[str, dict] = {}
     for name, fn in _lines(smoke).items():
-        step_s = _time_launch(lambda: fn("step"), repeats)
-        trace_s = _time_launch(lambda: fn("trace"), repeats)
-        speedup = step_s / trace_s if trace_s > 0 else float("inf")
-        results[name] = {
-            "step_us": round(step_s * 1e6, 1),
-            "trace_us": round(trace_s * 1e6, 1),
-            "speedup": round(speedup, 3),
-        }
-        emit(f"engine_{name}", trace_s * 1e6,
-             f"step={step_s * 1e6:.0f}us speedup={speedup:.2f}x")
+        results[name] = _measure_line(fn, repeats)
+        emit(f"engine_{name}", results[name]["mega_us"],
+             f"trace={results[name]['trace_us']:.0f}us "
+             f"step={results[name]['step_us']:.0f}us "
+             f"mega_vs_trace={results[name]['mega_vs_trace']:.2f}x")
+    results["cold_start_lowering"] = _cold_start_line(repeats)
+    emit("engine_cold_start_lowering",
+         results["cold_start_lowering"]["warm_us"],
+         f"cold={results['cold_start_lowering']['cold_us']:.0f}us "
+         f"speedup={results['cold_start_lowering']['speedup']:.2f}x")
     # packed-vs-grid: same engine (trace), different wave membership
     packed_name, packed_fn = _packed_line()
     packed_key = f"packed_{packed_name}"
@@ -154,32 +231,35 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         f.write("\n")
     if smoke:
         # the CI gate: decode-once execution must not lose to per-step
-        # decode on the compute-heavy lines (FFT + QRD), and the merged
+        # decode on the compute-heavy lines (FFT + QRD), the merged
         # heterogeneous-wave path must beat the step machine by >= 1.2x
-        # on the mixed FFT+QRD launch. One re-measure before failing
-        # absorbs shared-runner scheduling jitter without weakening the
-        # bound.
+        # on the mixed FFT+QRD launch, and the megakernel's fused
+        # segments + plan-time constant folding must beat the trace scan
+        # by >= 1.5x on FFT64/QRD16 (and never lose to it on the mixed
+        # line). One re-measure before failing absorbs shared-runner
+        # scheduling jitter without weakening the bound.
         lines = _lines(smoke)
         floor = {n: (1.2 if n.startswith("mixed") else 1.0)
                  for n in results if n.startswith(("fft", "qrd", "mixed"))}
+        mega_floor = {n: (1.0 if n.startswith("mixed") else 1.5)
+                      for n in floor}
         gated = sorted(floor)
         assert any(n.startswith("mixed") for n in gated), \
             "smoke set lost its heterogeneous mixed line"
         assert len(gated) >= 3, "smoke set lost its FFT/QRD lines"
         retried = False
         for n in gated:
-            if results[n]["speedup"] < floor[n]:
-                step_s = _time_launch(lambda: lines[n]("step"), repeats)
-                trace_s = _time_launch(lambda: lines[n]("trace"), repeats)
-                if step_s / trace_s > results[n]["speedup"]:
-                    results[n] = {
-                        "step_us": round(step_s * 1e6, 1),
-                        "trace_us": round(trace_s * 1e6, 1),
-                        "speedup": round(step_s / trace_s, 3),
-                    }
-                    emit(f"engine_{n}_retry", trace_s * 1e6,
-                         f"step={step_s * 1e6:.0f}us "
-                         f"speedup={results[n]['speedup']:.2f}x")
+            if results[n]["speedup"] < floor[n] \
+                    or results[n]["mega_vs_trace"] < mega_floor[n]:
+                redo = _measure_line(lines[n], repeats)
+                if (redo["speedup"] > results[n]["speedup"]
+                        or redo["mega_vs_trace"]
+                        > results[n]["mega_vs_trace"]):
+                    results[n] = redo
+                    emit(f"engine_{n}_retry", redo["mega_us"],
+                         f"trace={redo['trace_us']:.0f}us "
+                         f"speedup={redo['speedup']:.2f}x "
+                         f"mega_vs_trace={redo['mega_vs_trace']:.2f}x")
                 retried = True
         # the packing gate: length packing must not lose to grid order
         # on the interleaved mixed trace line (same one-retry absorb)
@@ -199,6 +279,9 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         for n in gated:
             assert results[n]["speedup"] >= floor[n], (
                 f"trace engine speedup below the {floor[n]}x gate on "
+                f"{n}: {results[n]}")
+            assert results[n]["mega_vs_trace"] >= mega_floor[n], (
+                f"megakernel below the {mega_floor[n]}x-vs-trace gate on "
                 f"{n}: {results[n]}")
         assert results[packed_key]["speedup"] >= 1.0, (
             f"length packing lost to grid-order waves on the interleaved "

@@ -65,13 +65,19 @@ def smoke() -> None:
     assert np.allclose(X, np.fft.fft(xs, axis=1), atol=1e-4)
     assert np.allclose(np.einsum("bij,bjk->bik", Q, R), As, atol=1e-4)
     assert mres.schedule == "dynamic" and mres.cycles <= mres.static_cycles
-    # auto must take the merged heterogeneous trace path (and say so)
-    assert mres.engine == "trace", mres.profile()["engine_fallback"]
+    # auto must take the merged heterogeneous MEGAKERNEL path (and say
+    # so): fused segments per slot, zero padded rows, fusion stats
+    assert mres.engine == "megakernel", \
+        mres.profile()["engine_fallback"]
     merge = mres.profile()["trace_merge"]
     assert merge["n_waves"] >= 1
+    assert merge["pad_overhead"] == 0.0
+    assert merge["fusion"]["fused_rows"] > 0
+    assert merge["fusion"]["folded_rows"] >= 0
     print(f"smoke_mixed_launch,0.0,dynamic={mres.cycles} "
           f"static={mres.static_cycles} "
-          f"merge_pad={merge['pad_overhead']:.2f}")
+          f"fused={merge['fusion']['fused_rows']} "
+          f"folded={merge['fusion']['folded_rows']}")
     # wave packing: on the backloaded mixed grid (grid-order waves
     # straddle the FFT/QRD boundary) length packing must cut the
     # launch-level pad aggregate by >= 25% — a deterministic gate on the
@@ -95,9 +101,12 @@ def smoke() -> None:
         f"length packing cut pad_overhead_total by < 25%: {pads}")
     print(f"smoke_packed_launch,0.0,pad_total {pads['grid']}->"
           f"{pads['length']}")
-    # step-vs-trace engine wall clock; writes BENCH_engine.json and gates
-    # CI on the trace engine not losing on the FFT/QRD lines and beating
-    # 1.2x on the merged heterogeneous mixed line
+    # step/trace/megakernel engine wall clock; writes BENCH_engine.json
+    # and gates CI on the trace engine not losing on the FFT/QRD lines,
+    # beating 1.2x on the merged heterogeneous mixed line, and the
+    # megakernel beating the trace scan >= 1.5x on FFT64/QRD16 (and
+    # never losing on the mixed line); also times the persistent
+    # compile cache's cold-vs-warm lowering
     engine_bench.run(smoke=True)
     print("smoke_ok,0.0,all benchmark entry points importable")
 

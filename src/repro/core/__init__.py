@@ -17,6 +17,11 @@ Public API:
                                            launch(..., engine="trace"))
     MergedTraceSchedule, compile_merged  — heterogeneous-wave schedules
                                            (mixed grids as one padded scan)
+    MegakernelPlan, compile_megakernel   — segment-megakernel engine
+    MergedMegakernelPlan,                  (fused gmem-free runs, partial
+    compile_merged_megakernel              evaluation; engine="megakernel")
+    compile_cache                        — persistent on-disk compile cache
+                                           (EGPU_CACHE_DIR / configure())
     WavePacking, pack_waves              — schedule-aware wave packing
                                            (which blocks share a wave;
                                            launch(..., packing="length"))
@@ -48,11 +53,16 @@ from .executor import (
 )
 from .trace_engine import (
     ENGINES,
+    MegakernelPlan,
+    MergedMegakernelPlan,
     MergedTraceSchedule,
     TraceSchedule,
+    compile_megakernel,
     compile_merged,
+    compile_merged_megakernel,
     compile_program,
 )
+from . import compile_cache
 from .isa import CLASS_NAMES, Depth, Instr, Op, Typ, Width
 from .machine import (
     MachineState,
@@ -75,6 +85,8 @@ __all__ = [
     "PACKINGS", "WavePacking", "pack_waves",
     "ENGINES", "MergedTraceSchedule", "TraceSchedule", "compile_merged",
     "compile_program",
+    "MegakernelPlan", "MergedMegakernelPlan", "compile_megakernel",
+    "compile_merged_megakernel", "compile_cache",
     "pack_imem", "run", "run_many",
     "ExecBackend", "execute_backends", "get_execute_backend",
     "register_backend", "register_execute_backend",

@@ -34,6 +34,7 @@ are relative to a 32-wavefront (512-thread) full block; the encoding is the
 """
 from __future__ import annotations
 
+import functools
 import re
 from dataclasses import dataclass, field
 
@@ -207,8 +208,15 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
     return Instr(**kw)
 
 
+@functools.lru_cache(maxsize=512)
 def assemble(text: str) -> Program:
-    """Two-pass assemble of a full program."""
+    """Two-pass assemble of a full program.
+
+    Memoized on the source text: assembly is pure, and the program
+    builders (FFT/QRD/saxpy) re-emit identical source every launch —
+    without the cache, re-assembly dominates warm launch time. Treat the
+    returned ``Program`` (and its ``words``) as immutable.
+    """
     lines = text.splitlines()
     # pass 1: label addresses
     labels: dict[str, int] = {}
@@ -334,9 +342,11 @@ def check_hazards(program: Program, n_threads: int = 512) -> list[str]:
 _WARN_PC = re.compile(r"pc=(\d+):.*insert (\d+) NOP-cycles")
 
 
+@functools.lru_cache(maxsize=512)
 def auto_nop(text: str, n_threads: int = 512, max_iter: int = 64) -> str:
     """Insert NOPs until ``check_hazards`` is clean (the programmer's job on
-    real eGPU hardware — no interlocks). Returns the padded source."""
+    real eGPU hardware — no interlocks). Returns the padded source.
+    Memoized like ``assemble`` (pure text -> text)."""
     for _ in range(max_iter):
         prog = assemble(text)
         warns = check_hazards(prog, n_threads)

@@ -247,7 +247,20 @@ def _trace_walk(words: tuple[int, ...], n_threads: int, imem_depth: int,
 @functools.lru_cache(maxsize=256)
 def _trace_cached(words: tuple[int, ...], n_threads: int, imem_depth: int,
                   max_steps: int) -> ProgramTrace:
-    return _trace_walk(words, n_threads, imem_depth, max_steps)
+    # second tier behind the in-process LRU: the opt-in persistent
+    # compile cache (core.compile_cache), so a production cold start
+    # loads the walk instead of re-sequencing the program. A corrupt or
+    # foreign entry loads as None (a miss) and is overwritten below.
+    from . import compile_cache
+
+    ckey = compile_cache.key_for(
+        "trace", words, (n_threads, imem_depth, max_steps))
+    hit = compile_cache.load(ckey)
+    if isinstance(hit, ProgramTrace):
+        return hit
+    tr = _trace_walk(words, n_threads, imem_depth, max_steps)
+    compile_cache.store(ckey, tr)
+    return tr
 
 
 def program_trace(program, n_threads: int, *, imem_depth: int = 512,

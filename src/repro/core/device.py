@@ -584,19 +584,26 @@ def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
                     ) -> tuple[str, str | None]:
     """Resolve the functional engine; returns ``(engine, fallback)``.
 
-    ``fallback`` is non-None exactly when ``"auto"`` degraded from the
-    trace fast path to the step machine — ``"auto"`` never degrades
-    silently; the reason is surfaced as
-    ``LaunchResult.profile()["engine_fallback"]``.
+    ``fallback`` is non-None exactly when ``"auto"`` degraded from its
+    first-choice engine — ``"auto"`` never degrades silently; the reason
+    is surfaced as ``LaunchResult.profile()["engine_fallback"]``. The
+    auto ladder is megakernel (fused segments, fastest) -> trace
+    (scanned schedule, when a program's schedule exceeds the megakernel
+    unroll cap) -> step (O(1) schedule memory, when a fuel-limited trace
+    means a runaway program).
     """
     mode = engine if engine is not None else dcfg.engine
     if mode == "auto":
-        # the trace engine materializes the full issued schedule; a
-        # fuel-limited (non-halting) trace means a runaway program, where
-        # the step machine's O(1) schedule memory is the right tool
-        if all(t.halted for t in traces):
-            return "trace", None
-        return "step", "fuel-limited-trace"
+        # the trace/megakernel engines materialize the full issued
+        # schedule; a fuel-limited (non-halting) trace means a runaway
+        # program, where the step machine's O(1) schedule memory is the
+        # right tool
+        if not all(t.halted for t in traces):
+            return "step", "fuel-limited-trace"
+        if max(t.data_steps for t in traces) \
+                > trace_engine.MEGAKERNEL_UNROLL_CAP:
+            return "trace", "megakernel-unroll-cap"
+        return "megakernel", None
     if mode not in trace_engine.ENGINES:
         raise ValueError(f"engine={mode!r} must be one of "
                          f"{trace_engine.ENGINES + ('auto',)}")
@@ -654,15 +661,22 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         each program once into a pre-decoded structure-of-arrays schedule
         and runs it as a single jitted ``lax.scan`` (no runtime decode, no
         dynamic pc, NOP/control steps compiled out — see
-        ``core.trace_engine``). On a heterogeneous grid the trace engine
-        MERGES the programs' schedules and packs blocks of different
-        programs into the same wave (padding to the longest participant;
-        ``profile()["trace_merge"]`` reports the overhead). "auto"
-        (default) picks "trace" whenever every program's static trace
-        terminates, falling back to "step" for runaway/fuel-limited
-        programs — never silently: ``profile()["engine_fallback"]`` names
-        the reason. Both engines are bit-identical on every backend;
-        timing is engine-independent.
+        ``core.trace_engine``); "megakernel" further fuses each segment
+        between global-port accesses into one kernel with host-constant
+        fields and masks (no per-row switch; the Pallas backend keeps
+        registers/shmem VMEM-resident across the fused steps). On a
+        heterogeneous grid both compiled engines MERGE the programs into
+        shared waves: the trace engine scans one padded merged schedule
+        (``profile()["trace_merge"]`` reports the padding), the
+        megakernel dispatches fused segments per live slot with the gmem
+        rows globally ordered (``trace_merge`` gains per-segment
+        ``fusion`` stats instead — no padded rows execute). "auto"
+        (default) picks "megakernel" whenever every program's static
+        trace terminates and fits the unroll cap, degrading to "trace"
+        above the cap and to "step" for runaway/fuel-limited programs —
+        never silently: ``profile()["engine_fallback"]`` names the
+        reason. All engines are bit-identical on every backend; timing
+        is engine-independent.
       packing: wave-packing policy deciding WHICH blocks share a wave
         within each barrier phase (``core.packing``). "grid" (the
         default) chunks blocks in grid order — byte-identical to the
@@ -764,16 +778,22 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         names.append(name)
     eng, eng_fallback = _resolve_engine(engine, dcfg, traces)
     present = [k for k in range(len(kernels)) if (gmap == k).any()]
-    # heterogeneous grids take the MERGED trace path: blocks of different
-    # programs share one wave, executed as a single scan over the padded
-    # merged schedule (trace_engine.MergedTraceSchedule)
-    use_merged = eng == "trace" and len(present) > 1
+    # heterogeneous grids take the MERGED path on both compiled engines:
+    # blocks of different programs share one wave, executed either as a
+    # single scan over the padded merged schedule
+    # (trace_engine.MergedTraceSchedule) or as per-slot fused segments
+    # with globally-ordered gmem rows (MergedMegakernelPlan)
+    use_merged = eng in ("trace", "megakernel") and len(present) > 1
     # lower only the kernels that actually own blocks in this grid (the
     # merged path lowers through the same per-program compile cache)
     scheds = [trace_engine.compile_program(w, c)
               if eng == "trace" and not use_merged and (gmap == k).any()
               else None
               for k, (w, c) in enumerate(zip(word_arrays, cfgs))]
+    plans = [trace_engine.compile_megakernel(w, c)
+             if eng == "megakernel" and not use_merged
+             and (gmap == k).any() else None
+             for k, (w, c) in enumerate(zip(word_arrays, cfgs))]
 
     # ---- wave packing: one membership decision for every layer ----------
     # the packer keys on each block's pre-decoded schedule length
@@ -851,8 +871,12 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
 
         def merged_sched(sig):
             if sig not in msched_of:
-                msched_of[sig] = trace_engine.compile_merged(
-                    [word_arrays[k] for k in sig], [cfgs[k] for k in sig])
+                progs = [word_arrays[k] for k in sig]
+                cs = [cfgs[k] for k in sig]
+                msched_of[sig] = \
+                    trace_engine.compile_merged_megakernel(progs, cs) \
+                    if eng == "megakernel" \
+                    else trace_engine.compile_merged(progs, cs)
             return msched_of[sig]
 
         per_wave: list[dict[str, Any]] = []
@@ -885,7 +909,9 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
                     segs.append(img)
                 off += c
             sh0 = jnp.concatenate(segs, axis=0)
-            regs_f, sh_f, gm, oob_f = trace_engine.run_wave_merged(
+            run_merged = trace_engine.run_wave_merged_megakernel \
+                if eng == "megakernel" else trace_engine.run_wave_merged
+            regs_f, sh_f, gm, oob_f = run_merged(
                 backend, msched, counts, local_bid[blocks], pids,
                 jnp.zeros((n, MAX_THREADS, N_REGS), _U32), sh0, gm,
                 jnp.zeros((n,), jnp.bool_))
@@ -894,15 +920,24 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
                 shmem_slots[b] = sh_f[i]
                 oob_slots[b] = oob_f[i]
             halted = halted and msched.halted
-            pad = int(msched.padded_steps(slot))
-            rows = int(msched.n_steps) * n
-            per_wave.append({
+            rec = {
                 "programs": [names[k] for k in sig],
                 "width": int(n),
                 "scan_steps": int(msched.n_steps),
-                "padded_steps": pad,
-                "pad_overhead": (pad / rows) if rows else 0.0,
-            })
+            }
+            if eng == "megakernel":
+                # fused segments execute no padded rows: short members
+                # simply stop fusing earlier, so the merge's only
+                # cross-slot cost is the globally-ordered gmem drains —
+                # surfaced as per-wave fusion stats instead
+                rec.update(padded_steps=0, pad_overhead=0.0,
+                           fusion=msched.stats())
+            else:
+                pad = int(msched.padded_steps(slot))
+                rows = int(msched.n_steps) * n
+                rec.update(padded_steps=pad,
+                           pad_overhead=(pad / rows) if rows else 0.0)
+            per_wave.append(rec)
         merge_stats = trace_engine.merge_profile(per_wave, wp.policy)
     else:
         # homogeneous path: exact lockstep batches per program,
@@ -926,6 +961,9 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
                 if eng == "trace":
                     fin = trace_engine.run_wave_trace(
                         cfg, backend, scheds[k], bidx, pidx, st)
+                elif eng == "megakernel":
+                    fin = trace_engine.run_wave_megakernel(
+                        backend, plans[k], bidx, pidx, st)
                 else:
                     fin = run_wave(cfg, backend, lo, hi, bidx, pidx, st)
                 gm = fin.gmem               # batches run back to back

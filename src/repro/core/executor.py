@@ -63,7 +63,7 @@ import numpy as np
 
 from . import isa
 from .isa import Op
-from .machine import MachineState, SMConfig
+from .machine import MAX_THREADS, MAX_WAVES, N_SP, MachineState, SMConfig
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
@@ -153,12 +153,430 @@ for _op in Op:
 # pre-gathered source-operand tiles, ``mask``/``do`` the flexible-ISA
 # active-thread mask (with out-of-range lanes already dropped), ``addr``
 # pre-clipped to the memory depth for the gathers and raw for the scatters.
-# All five ops must be bit-exact across backends; both engines (the
-# stepping machine and the trace engine) drive them through
-# ``make_data_handlers`` below, so functional semantics are shared by
+# All five ops must be bit-exact across backends; the stepping machine
+# and the trace engine drive them through ``make_data_handlers`` below,
+# and the megakernel engine's fused rows (``_apply_row_cols``) are
+# decoded from the same tables — so functional semantics are shared by
 # construction.
 
 ExecuteOp = Callable[..., jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# fused segments (the megakernel engine's unit of work)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedRow:
+    """One pre-decoded data instruction, fully resolved on the host.
+
+    Unlike the trace engine's scanned schedule — where the decoded fields
+    are traced i32 scalars selected per step — a fused row carries its
+    fields as HOST constants (``sel`` the data-switch branch, ``d`` numpy
+    i32 scalars, ``active`` the (512,) numpy thread mask). Constant
+    fields let XLA fold the per-row dispatch, masks and operand selects
+    at trace time, which is the megakernel speedup: the 10-way
+    ``lax.switch`` and the mask/branch arithmetic disappear from the
+    compiled body entirely.
+    """
+
+    sel: int                   # data-switch branch (never 0/8/9 in a
+                               # fused run: identity rows are dropped and
+                               # global-port rows break segments)
+    d: dict                    # decoded fields as np.int32 scalars
+    active: np.ndarray         # (512,) bool flexible-ISA thread mask
+    act_waves: int             # flexible-ISA depth (active wavefronts) —
+    act_wthreads: int          # ... and width; `active` is derived from
+                               # these, but the fused body rebuilds the
+                               # traced mask from iota comparisons so a
+                               # Pallas kernel never captures a constant
+                               # array (Pallas rejects captured consts)
+
+
+def _apply_row_cols(cfg, backend: "ExecBackend", row: FusedRow, cols,
+                    shmem, oob, block_idx, prog_idx,
+                    shmem_depth: int | None):
+    """One fused row over UNPACKED register columns.
+
+    ``cols`` is the mutable list of 16 per-register (n_sms, 512) tiles.
+    This is the same data path as the matching ``make_data_handlers``
+    handler — same backend seam ops (``backend.alu``/``lod``/``sto``),
+    same mask/clip/trap formulas — specialized for host-constant fields:
+    a register write is a zero-copy column rebinding instead of a
+    (n_sms, 512, 16) scatter, a no-snoop operand read is the column
+    itself instead of a dynamic gather, and the select chains collapse
+    to the one taken branch (which computes the identical values).
+    Bit-identity vs the packed handlers is pinned by the engine
+    conformance matrix.
+    """
+    from .isa import Typ
+
+    d = row.d
+    sel = row.sel
+    op, typ = int(d["opcode"]), int(d["typ"])
+    rd, ra, rb = int(d["rd"]), int(d["ra"]), int(d["rb"])
+    imm = int(d["imm"])
+    snoop = int(d["x"]) == 1
+    n_sms = cols[0].shape[0]
+    # the traced mask and snoop indices are rebuilt from iota comparisons
+    # against Python-int fields: XLA folds them to constants at compile
+    # time, and a Pallas kernel tracing this body captures no constant
+    # arrays (which pallas_call rejects)
+    tid_t = jnp.arange(MAX_THREADS, dtype=_I32)
+    lane_t = tid_t % N_SP
+    active = ((lane_t < row.act_wthreads)
+              & (tid_t // N_SP < row.act_waves)
+              & (tid_t < cfg.n_threads))
+
+    def read(r, ext):
+        # snoop (X=1) gathers regs[ext*16 + lane]; without it the
+        # operand IS the register column — no gather at all
+        if snoop:
+            return jnp.take(cols[r], int(ext) * N_SP + lane_t, axis=1)
+        return cols[r]
+
+    def addr_of():
+        a_u = read(ra, d["ext_a"])
+        return jax.lax.bitcast_convert_type(a_u, _I32) + imm
+
+    if sel == 1:                                           # ALU
+        a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
+        old = cols[rd]
+        mask = jnp.broadcast_to(active, old.shape)
+        cols[rd] = backend.alu(d["opcode"], d["typ"], a_u, b_u, mask, old)
+    elif sel == 2:                                         # LOD
+        depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
+        addr = addr_of()
+        bad = active & ((addr < 0) | (addr >= depth))
+        safe = jnp.clip(addr, 0, depth - 1)
+        mask = active & ~bad
+        cols[rd] = backend.lod(shmem, safe, mask, cols[rd])
+        oob = oob | bad.any(axis=1)
+    elif sel == 3:                                         # STO
+        depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
+        addr = addr_of()
+        bad = active & ((addr < 0) | (addr >= depth))
+        shmem = backend.sto(shmem, addr, cols[rd], active & ~bad)
+        oob = oob | bad.any(axis=1)
+    elif sel == 4:                                         # LODI
+        if typ == int(Typ.FP32):
+            val = int(np.float32(imm).view(np.uint32))     # host bitcast
+        else:
+            val = imm & 0xFFFFFFFF
+        vals = jnp.full((n_sms, MAX_THREADS), val, _U32)
+        cols[rd] = jnp.where(active, vals, cols[rd])
+    elif sel == 5:                                         # TDX/TDY/BID/PID
+        if op == int(Op.TDX):
+            vals = jnp.broadcast_to((tid_t % cfg.dim_x).astype(_U32)[None],
+                                    (n_sms, MAX_THREADS))
+        elif op == int(Op.TDY):
+            vals = jnp.broadcast_to(
+                (tid_t // cfg.dim_x).astype(_U32)[None],
+                (n_sms, MAX_THREADS))
+        elif op == int(Op.BID):
+            vals = jnp.broadcast_to(block_idx.astype(_U32)[:, None],
+                                    (n_sms, MAX_THREADS))
+        else:
+            vals = jnp.broadcast_to(prog_idx.astype(_U32)[:, None],
+                                    (n_sms, MAX_THREADS))
+        cols[rd] = jnp.where(active, vals, cols[rd])
+    elif sel == 6:                                         # DOT/SUM
+        a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
+        lane_active = active.reshape(MAX_WAVES, N_SP)
+        a2 = jax.lax.bitcast_convert_type(a_u, _F32) \
+            .reshape(n_sms, MAX_WAVES, N_SP)
+        b2 = jax.lax.bitcast_convert_type(b_u, _F32) \
+            .reshape(n_sms, MAX_WAVES, N_SP)
+        prod = a2 * b2 if op == int(Op.DOT) else a2 + b2
+        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
+        wave_active = lane_active.any(axis=1)
+        dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP    # lane 0 per wave
+        cur = cols[rd][:, ::N_SP]
+        new = jnp.where(wave_active[None],
+                        jax.lax.bitcast_convert_type(red, _U32), cur)
+        cols[rd] = cols[rd].at[:, dest].set(new)
+    elif sel == 7:                                         # SFU (INVSQR)
+        src = int(d["ext_a"]) * N_SP if snoop else 0
+        val = jax.lax.bitcast_convert_type(cols[ra][:, src], _F32)
+        cols[rd] = cols[rd].at[:, 0].set(
+            jax.lax.bitcast_convert_type(jax.lax.rsqrt(val), _U32))
+    else:
+        raise AssertionError(
+            f"fused row with non-SM-local handler sel={sel}")
+    return cols, shmem, oob
+
+
+def apply_segment_rows(cfg, backend: "ExecBackend", rows, block_idx,
+                       prog_idx, regs, shmem, oob, *,
+                       shmem_depth: int | None = None):
+    """Unroll one fused segment body-to-body over an SM batch.
+
+    ``rows`` is a tuple of ``FusedRow`` containing only SM-local data ops
+    (ALU/LOD/STO/LODI/TD/RED/SFU — global-port rows delimit segments, so
+    GLD/GST never appear here). The register file is unpacked into 16
+    per-register columns for the whole segment, every row executes the
+    shared backend seam ops with host-constant fields via
+    ``_apply_row_cols``, and the file repacks once at the segment end —
+    so a K-row segment pays 2 register-file copies instead of K.
+
+    Both megakernel backends stage this one helper: "inline" (and any
+    backend without a fused implementation, via ``exec_segment``) calls
+    it directly; "pallas" runs it inside a single ``pallas_call`` that
+    keeps the batch's registers/shmem resident across the fused steps
+    (``kernels.simt_step.simt_segment``).
+    """
+    cols = [regs[:, :, r] for r in range(regs.shape[2])]
+    for r in rows:
+        cols, shmem, oob = _apply_row_cols(cfg, backend, r, cols, shmem,
+                                           oob, block_idx, prog_idx,
+                                           shmem_depth)
+    return jnp.stack(cols, axis=2), shmem, oob
+
+
+# ---------------------------------------------------------------------------
+# plan-time partial evaluation (the megakernel's compile-time optimizer)
+# ---------------------------------------------------------------------------
+#
+# Every wave starts from the architecturally-defined init state
+# (``device.init_device_state``: all registers zero), and the flexible
+# ISA has no data-dependent control flow — so at PLAN time (on the host,
+# outside jit) the evaluator can thread exact register-column values
+# through the fused rows. A column stays "known" (a concrete (512,)
+# value) until a shared/global-memory load or a mixed write makes it
+# runtime. Three rewrites fall out:
+#
+#   * rows whose operands and destination are all known FOLD AWAY —
+#     evaluated eagerly at plan time by the SAME ``_apply_row_cols``
+#     body (same jax ops, run eagerly: bit-identical by construction).
+#     TDX/TDY/LODI chains and all address arithmetic vanish from the
+#     compiled kernel.
+#   * LOD rows with a known address column become STATIC GATHERS —
+#     clip/trap/mask all resolved on the host, leaving one constant-
+#     index gather plus a masked select.
+#   * STO rows with a known address column become STATIC SCATTERS —
+#     the single-port last-writer-wins arbitration resolves on the host
+#     (the winning thread per address is a plan-time constant), leaving
+#     one sorted unique-index set instead of a runtime scatter-max.
+#
+# The residual program assumes the zero-init contract: it is only valid
+# for waves starting from ``init_device_state`` (which is how the device
+# layer always launches). Backends opt in with ``fold_constants`` — only
+# the reference "inline" backend does; custom backends keep the generic
+# per-op seam (they must observe every ``alu``/``lod``/``sto`` call),
+# and the Pallas backend runs its own fused kernel over the raw rows.
+
+@dataclasses.dataclass(frozen=True)
+class FusedSegment:
+    """One fused segment: the raw row run plus its partial evaluation.
+
+    ``rows`` feeds the generic and Pallas paths; ``residual`` (the ops
+    left after plan-time constant folding, with host-resolved gather/
+    scatter plans) feeds ``apply_segment_residual`` on fold-capable
+    backends; ``final_consts`` are the register columns whose value is
+    fully known at segment end (materialized once at repack).
+    """
+
+    rows: tuple                # FusedRow run (generic/Pallas path)
+    residual: tuple            # (kind, row, data, consts) residual ops
+    final_consts: tuple        # ((reg, (512,) np.uint32), ...)
+    n_folded: int              # rows evaluated away entirely at plan time
+
+
+# register indices each handler reads (operands + read-modify-write dest)
+_ROW_READS = {1: ("ra", "rb", "rd"), 2: ("ra", "rd"), 3: ("ra", "rd"),
+              4: ("rd",), 5: ("rd",), 6: ("ra", "rb", "rd"),
+              7: ("ra", "rd")}
+
+
+def _fold_row(cfg, row: FusedRow, const_cols, depth: int) -> np.ndarray:
+    """Evaluate one fully-known row eagerly (host): run the SAME
+    ``_apply_row_cols`` body on (1, 512) tiles of the known columns and
+    return the new destination column. Eager jax == jitted jax for
+    these elementwise/reduce ops, so folding is bit-exact."""
+    cols = [jnp.asarray(c)[None] if c is not None
+            else jnp.zeros((1, MAX_THREADS), _U32) for c in const_cols]
+    z = jnp.zeros((1,), _I32)
+    cols, _, _ = _apply_row_cols(
+        cfg, get_execute_backend("inline"), row, cols,
+        jnp.zeros((1, 1), _U32), jnp.zeros((1,), jnp.bool_), z, z, depth)
+    return np.asarray(cols[int(row.d["rd"])][0])
+
+
+def _fold_addr(row: FusedRow, a_col: np.ndarray, depth: int):
+    """Resolve a LOD/STO address column on the host: (clipped addresses,
+    enabled-thread mask, any-trap flag) — the same clip/trap/mask
+    formulas as the runtime handlers, on the known column."""
+    a_u = np.asarray(a_col)
+    if int(row.d["x"]) == 1:                       # snoop gather
+        lane = np.arange(MAX_THREADS) % N_SP
+        a_u = a_u[int(row.d["ext_a"]) * N_SP + lane]
+    addr = a_u.astype(np.int32) + int(row.d["imm"])
+    active = np.asarray(row.active)
+    bad = active & ((addr < 0) | (addr >= depth))
+    safe = np.clip(addr, 0, depth - 1).astype(np.int32)
+    return safe, (active & ~bad), bool(bad.any())
+
+
+def eval_segment_rows(cfg, rows, const_cols, depth: int):
+    """Partially evaluate one fused segment (host, plan time).
+
+    ``const_cols`` is the per-register known-value state entering the
+    segment (list of (512,) np.uint32 or None = runtime). Returns
+    ``(FusedSegment, const_cols_out)``; the evaluator folds what it can
+    and annotates every residual op with the known columns it touches
+    that changed since segment entry (``dirty``), so the trace-time
+    executor can materialize exactly those as literals.
+    """
+    from .isa import Op as _Op
+
+    const_cols = list(const_cols)
+    dirty: set[int] = set()
+    residual = []
+    n_folded = 0
+
+    def consts_for(regs):
+        return tuple((r, const_cols[r]) for r in sorted(set(regs))
+                     if const_cols[r] is not None and r in dirty)
+
+    # every write mask includes ``tid < n_threads`` and registers start
+    # zeroed, so lanes >= n_threads stay zero through the whole run — a
+    # row whose mask covers ALL of [0, n_threads) therefore fully
+    # determines its destination even when the old column is runtime
+    # (``_fold_row`` substitutes the invariant zeros for unknown lanes)
+    full_mask = np.arange(MAX_THREADS) < cfg.n_threads
+
+    for row in rows:
+        sel, d = row.sel, row.d
+        rd, ra, rb = int(d["rd"]), int(d["ra"]), int(d["rb"])
+        op = int(d["opcode"])
+        known = [const_cols[r] is not None for r in range(len(const_cols))]
+        w_all = known[rd] or np.array_equal(np.asarray(row.active),
+                                            full_mask)
+
+        foldable = (
+            (sel == 1 and known[ra] and known[rb] and w_all)
+            or (sel == 4 and w_all)
+            or (sel == 5 and op in (int(_Op.TDX), int(_Op.TDY))
+                and w_all)
+            or (sel == 6 and known[ra] and known[rb] and known[rd])
+            or (sel == 7 and known[ra] and known[rd]))
+        if foldable:
+            const_cols[rd] = _fold_row(cfg, row, const_cols, depth)
+            dirty.add(rd)
+            n_folded += 1
+            continue
+
+        if sel == 2 and known[ra]:                 # static-address LOD
+            safe, mask, bad_any = _fold_addr(row, const_cols[ra], depth)
+            residual.append(("lod", row, (safe, mask, bad_any),
+                             consts_for((rd,))))
+            const_cols[rd] = None
+            continue
+
+        if sel == 3 and known[ra]:                 # static-address STO
+            safe, do, bad_any = _fold_addr(row, const_cols[ra], depth)
+            # single-port arbitration on the host: ascending thread
+            # order, last enabled writer per address wins (exactly
+            # ``_last_writer_write``'s order=tid rule)
+            win: dict[int, int] = {}
+            for t in np.flatnonzero(do):           # do-masked ⇒ in range
+                win[int(safe[t])] = int(t)
+            targets = np.array(sorted(win), np.int32)
+            winners = np.array([win[a] for a in sorted(win)], np.int32)
+            residual.append(("sto", row, (targets, winners, bad_any),
+                             consts_for((rd,))))
+            continue
+
+        # generic runtime row (known operands materialize as literals)
+        residual.append(("exec", row, None, consts_for(
+            tuple({"ra": ra, "rb": rb, "rd": rd}[f]
+                  for f in _ROW_READS[sel]))))
+        if sel != 3:                               # STO writes no register
+            const_cols[rd] = None
+
+    final = tuple((r, const_cols[r]) for r in sorted(dirty)
+                  if const_cols[r] is not None)
+    return (FusedSegment(rows=tuple(rows), residual=tuple(residual),
+                         final_consts=final, n_folded=n_folded),
+            const_cols)
+
+
+def apply_segment_residual(cfg, backend: "ExecBackend", seg: FusedSegment,
+                           block_idx, prog_idx, regs, shmem, oob, *,
+                           shmem_depth: int | None = None):
+    """Execute one partially-evaluated segment (trace time).
+
+    Residual ops run over unpacked columns like ``apply_segment_rows``;
+    folded columns materialize as literals only where read or at the
+    final repack. Valid only under the zero-init wave contract (see the
+    module comment above ``FusedSegment``)."""
+    n = regs.shape[0]
+    cols = [regs[:, :, r] for r in range(regs.shape[2])]
+
+    def mat(v):
+        return jnp.broadcast_to(jnp.asarray(v)[None], (n, MAX_THREADS))
+
+    for kind, row, data, consts in seg.residual:
+        for r, v in consts:
+            cols[r] = mat(v)
+        if kind == "exec":
+            cols, shmem, oob = _apply_row_cols(
+                cfg, backend, row, cols, shmem, oob, block_idx, prog_idx,
+                shmem_depth)
+        elif kind == "lod":
+            safe, mask, bad_any = data
+            rd = int(row.d["rd"])
+            vals = jnp.take(shmem, jnp.asarray(safe), axis=1)
+            cols[rd] = jnp.where(jnp.asarray(mask), vals, cols[rd])
+            if bad_any:
+                oob = oob | jnp.bool_(True)
+        else:                                      # static-address STO
+            targets, winners, bad_any = data
+            rd = int(row.d["rd"])
+            if len(targets):
+                shmem = shmem.at[:, jnp.asarray(targets)].set(
+                    cols[rd][:, winners], unique_indices=True,
+                    indices_are_sorted=True)
+            if bad_any:
+                oob = oob | jnp.bool_(True)
+    for r, v in seg.final_consts:
+        cols[r] = mat(v)
+    return jnp.stack(cols, axis=2), shmem, oob
+
+
+def exec_segment(backend: "ExecBackend", cfg, seg, block_idx, prog_idx,
+                 regs, shmem, oob, *, shmem_depth: int | None = None):
+    """Run one fused segment on ``backend``: its own fused implementation
+    when it ships one, else the partially-evaluated residual on
+    fold-capable (reference-semantics) backends, else the generic
+    unrolled chain over the backend's per-op seam (so ALU-only custom
+    backends keep their ALU semantics under the megakernel engine).
+
+    ``seg`` is a ``FusedSegment``; a raw row tuple is accepted for the
+    generic paths (no residual available)."""
+    rows = seg.rows if isinstance(seg, FusedSegment) else tuple(seg)
+    if backend.segment is not None:
+        return backend.segment(cfg, rows, block_idx, prog_idx, regs,
+                               shmem, oob, shmem_depth=shmem_depth)
+    if backend.fold_constants and isinstance(seg, FusedSegment):
+        return apply_segment_residual(cfg, backend, seg, block_idx,
+                                      prog_idx, regs, shmem, oob,
+                                      shmem_depth=shmem_depth)
+    return apply_segment_rows(cfg, backend, rows, block_idx, prog_idx,
+                              regs, shmem, oob, shmem_depth=shmem_depth)
+
+
+def _pallas_segment(cfg, rows, block_idx, prog_idx, regs, shmem, oob, *,
+                    shmem_depth: int | None = None):
+    """Pallas fused segment: ONE kernel per segment, registers/shmem
+    resident in VMEM across every fused step (no per-instruction
+    round-trip)."""
+    from ..kernels import ops
+    from ..kernels.simt_step import simt_segment
+
+    return simt_segment(cfg, rows, block_idx, prog_idx, regs, shmem, oob,
+                        shmem_depth=shmem_depth,
+                        interpret=ops.interpret_mode())
 
 
 def _last_writer_write(mem, addr, vals, do, order):
@@ -202,7 +620,17 @@ def _inline_gst(gmem, addr, vals, do) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class ExecBackend:
-    """One named implementation of the execute-stage data path."""
+    """One named implementation of the execute-stage data path.
+
+    ``segment`` is the fused-segment entry point the megakernel engine
+    drives (via ``exec_segment``): a whole run of SM-local rows executed
+    as one unit (``(cfg, rows, block_idx, prog_idx, regs, shmem, oob, *,
+    shmem_depth) -> (regs, shmem, oob)``). None (the default) means the
+    generic unrolled chain ``apply_segment_rows`` over this backend's
+    own per-op seam; the Pallas backend overrides it with a single fused
+    ``pallas_call`` staging the SAME chain, so fused execution is
+    bit-identical across backends by construction.
+    """
 
     name: str
     alu: ExecuteOp = _inline_alu
@@ -210,6 +638,11 @@ class ExecBackend:
     sto: ExecuteOp = _inline_sto
     gld: ExecuteOp = _inline_gld
     gst: ExecuteOp = _inline_gst
+    segment: Callable | None = None
+    # reference-semantics backends opt in to the megakernel's plan-time
+    # partial evaluation (folded rows never reach the per-op seam, so a
+    # backend that needs to SEE every op must leave this False)
+    fold_constants: bool = False
 
 
 _EXECUTE_BACKENDS: dict[str, ExecBackend] = {}
@@ -242,7 +675,7 @@ def execute_backends() -> tuple[str, ...]:
     return tuple(sorted(_EXECUTE_BACKENDS))
 
 
-register_backend(ExecBackend(name="inline"))
+register_backend(ExecBackend(name="inline", fold_constants=True))
 
 
 def _pallas_alu(op, typ, a, b, mask, old) -> jax.Array:
@@ -255,7 +688,7 @@ def _pallas_alu(op, typ, a, b, mask, old) -> jax.Array:
     block_sm = max(d for d in range(1, min(8, n_sm) + 1) if n_sm % d == 0)
     return simt_alu(op.astype(_I32), typ.astype(_I32), a, b,
                     mask.astype(_U32), old,
-                    interpret=ops.INTERPRET, block_sm=block_sm)
+                    interpret=ops.interpret_mode(), block_sm=block_sm)
 
 
 def _pallas_lod(shmem, addr, mask, old) -> jax.Array:
@@ -263,7 +696,7 @@ def _pallas_lod(shmem, addr, mask, old) -> jax.Array:
     from ..kernels.simt_step import simt_gather
 
     return simt_gather(shmem, addr, mask.astype(_U32), old,
-                       interpret=ops.INTERPRET)
+                       interpret=ops.interpret_mode())
 
 
 def _pallas_sto(shmem, addr, vals, do) -> jax.Array:
@@ -271,7 +704,7 @@ def _pallas_sto(shmem, addr, vals, do) -> jax.Array:
     from ..kernels.simt_step import simt_scatter
 
     return simt_scatter(shmem, addr, vals, do.astype(_U32),
-                        interpret=ops.INTERPRET)
+                        interpret=ops.interpret_mode())
 
 
 def _pallas_gld(gmem, addr, mask, old) -> jax.Array:
@@ -279,7 +712,7 @@ def _pallas_gld(gmem, addr, mask, old) -> jax.Array:
     from ..kernels.simt_step import simt_gather_shared
 
     return simt_gather_shared(gmem, addr, mask.astype(_U32), old,
-                              interpret=ops.INTERPRET)
+                              interpret=ops.interpret_mode())
 
 
 def _pallas_gst(gmem, addr, vals, do) -> jax.Array:
@@ -287,16 +720,17 @@ def _pallas_gst(gmem, addr, vals, do) -> jax.Array:
     from ..kernels.simt_step import simt_scatter_shared
 
     return simt_scatter_shared(gmem, addr, vals, do.astype(_U32),
-                               interpret=ops.INTERPRET)
+                               interpret=ops.interpret_mode())
 
 
 register_backend(ExecBackend(
     name="pallas", alu=_pallas_alu, lod=_pallas_lod, sto=_pallas_sto,
-    gld=_pallas_gld, gst=_pallas_gst))
+    gld=_pallas_gld, gst=_pallas_gst, segment=_pallas_segment))
 
 
 # ---------------------------------------------------------------------------
-# the shared execute stage (both engines dispatch into these handlers)
+# the shared execute stage (step + trace engines dispatch into these
+# handlers; the megakernel's fused rows replay the same semantics)
 # ---------------------------------------------------------------------------
 #
 # The data path of one instruction over a lockstep SM batch, factored out
@@ -341,7 +775,6 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
     ``[shmem_depth, array depth)`` still trap/drop exactly as they do when
     the program runs alone on a ``shmem_depth``-deep SM.
     """
-    from .machine import MAX_THREADS, MAX_WAVES, N_SP
 
     tid = jnp.arange(MAX_THREADS, dtype=_I32)
     lane = tid % N_SP

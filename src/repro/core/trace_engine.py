@@ -68,6 +68,7 @@ from .cycles import ProgramTrace, program_trace
 from .executor import (
     DATA_SEL_OF_OP,
     _decode,
+    exec_segment,
     get_execute_backend,
     make_data_handlers,
 )
@@ -75,7 +76,14 @@ from .machine import MAX_THREADS, N_SP, SMConfig
 
 _I32 = jnp.int32
 
-ENGINES = ("step", "trace")
+ENGINES = ("step", "trace", "megakernel")
+
+# "auto" only picks the megakernel engine for programs whose schedules it
+# can unroll body-to-body without exploding trace/compile time; longer
+# schedules fall back to the scanned trace engine (engine_fallback =
+# "megakernel-unroll-cap"). An explicit engine="megakernel" ignores the
+# cap — the caller owns the compile-time trade.
+MEGAKERNEL_UNROLL_CAP = 4096
 
 # decoded-field columns of the structure-of-arrays schedule, in the order
 # they are packed into the (n_steps, len(_FIELDS)) i32 matrix
@@ -129,36 +137,48 @@ def _decode_words(words: np.ndarray) -> dict[str, np.ndarray]:
 
 @functools.lru_cache(maxsize=256)
 def _compile_cached(words_key: tuple, cfg: SMConfig) -> TraceSchedule:
-    trace = program_trace(np.asarray(words_key, np.int64), cfg.n_threads,
-                          imem_depth=cfg.imem_depth,
-                          max_steps=cfg.max_steps)
-    # data steps only: rows whose handler has an architectural data effect
-    sel_of = DATA_SEL_OF_OP
-    pcs = np.asarray([t.pc for t in trace.instrs
-                      if sel_of[int(t.op)] != 0], np.int64)
-    # the wave packer bins on trace.data_steps; it must equal the rows
-    # lowered here or "length" packing minimizes the wrong metric
-    assert pcs.size == trace.data_steps, \
-        "cycles.ProgramTrace.data_steps disagrees with DATA_SEL_OF_OP"
-    # every data pc addresses a real program word (STOP padding is control)
-    assert pcs.size == 0 or pcs.max() < len(words_key), \
-        "data instruction issued from STOP-padded I-MEM"
-    words = np.asarray(words_key, np.int64)[pcs] if pcs.size \
-        else np.zeros((0,), np.int64)
-    d = _decode_words(words)
-    n_waves = cfg.n_waves
-    depth_table = np.array(
-        [n_waves, max(1, n_waves // 2), max(1, n_waves // 4), 1], np.int64)
-    width_table = np.array([16, 8, 4, 1], np.int64)
-    cols = dict(
-        sel=sel_of[d["opcode"]],
-        opcode=d["opcode"], typ=d["typ"],
-        rd=d["rd"], ra=d["ra"], rb=d["rb"],
-        imm=d["imm"], x=d["x"], ext_a=d["ext_a"], ext_b=d["ext_b"],
-        act_waves=depth_table[d["depth"]],
-        act_wthreads=width_table[d["width"]],
-    )
-    xs = {f: jnp.asarray(np.asarray(cols[f], np.int32)) for f in _FIELDS}
+    from . import compile_cache
+
+    ckey = compile_cache.key_for("lowering", words_key, cfg)
+    payload = compile_cache.load(ckey)
+    if payload is not None:
+        trace, cols = payload["trace"], payload["cols"]
+    else:
+        trace = program_trace(np.asarray(words_key, np.int64),
+                              cfg.n_threads, imem_depth=cfg.imem_depth,
+                              max_steps=cfg.max_steps)
+        # data steps only: rows whose handler has an architectural data
+        # effect
+        sel_of = DATA_SEL_OF_OP
+        pcs = np.asarray([t.pc for t in trace.instrs
+                          if sel_of[int(t.op)] != 0], np.int64)
+        # the wave packer bins on trace.data_steps; it must equal the rows
+        # lowered here or "length" packing minimizes the wrong metric
+        assert pcs.size == trace.data_steps, \
+            "cycles.ProgramTrace.data_steps disagrees with DATA_SEL_OF_OP"
+        # every data pc addresses a real program word (STOP padding is
+        # control)
+        assert pcs.size == 0 or pcs.max() < len(words_key), \
+            "data instruction issued from STOP-padded I-MEM"
+        words = np.asarray(words_key, np.int64)[pcs] if pcs.size \
+            else np.zeros((0,), np.int64)
+        d = _decode_words(words)
+        n_waves = cfg.n_waves
+        depth_table = np.array(
+            [n_waves, max(1, n_waves // 2), max(1, n_waves // 4), 1],
+            np.int64)
+        width_table = np.array([16, 8, 4, 1], np.int64)
+        cols = dict(
+            sel=sel_of[d["opcode"]],
+            opcode=d["opcode"], typ=d["typ"],
+            rd=d["rd"], ra=d["ra"], rb=d["rb"],
+            imm=d["imm"], x=d["x"], ext_a=d["ext_a"], ext_b=d["ext_b"],
+            act_waves=depth_table[d["depth"]],
+            act_wthreads=width_table[d["width"]],
+        )
+        cols = {f: np.asarray(cols[f], np.int32) for f in _FIELDS}
+        compile_cache.store(ckey, {"trace": trace, "cols": cols})
+    xs = {f: jnp.asarray(cols[f]) for f in _FIELDS}
     from .isa import NUM_CLASSES
 
     by_base = np.asarray(trace.cycles_by_class(1), np.int64)
@@ -189,6 +209,10 @@ def compile_cache_info():
 def compile_cache_clear() -> None:
     _compile_cached.cache_clear()
     _merge_cached.cache_clear()
+    _megakernel_cached.cache_clear()
+    _megakernel_runner.cache_clear()
+    _merged_megakernel_cached.cache_clear()
+    _merged_megakernel_runner.cache_clear()
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -277,7 +301,7 @@ def merge_profile(per_wave: list, policy: str) -> dict:
     """
     scanned = sum(w["scan_steps"] * w["width"] for w in per_wave)
     padded = sum(w["padded_steps"] for w in per_wave)
-    return {
+    out = {
         "policy": policy,
         "n_waves": len(per_wave),
         "scan_steps": scanned,          # scheduled scan rows x width
@@ -287,6 +311,19 @@ def merge_profile(per_wave: list, policy: str) -> dict:
         "pad_overhead": (padded / scanned) if scanned else 0.0,
         "per_wave": per_wave,
     }
+    # megakernel waves additionally carry per-wave fusion stats —
+    # aggregate them launch-wide so profiles expose how much of the
+    # schedule ran fused vs through the serialized global port
+    fus = [w["fusion"] for w in per_wave if "fusion" in w]
+    if fus:
+        out["fusion"] = {
+            "segments": sum(f["segments"] for f in fus),
+            "fused_rows": sum(f["fused_rows"] for f in fus),
+            "folded_rows": sum(f["folded_rows"] for f in fus),
+            "gmem_rows": sum(f["gmem_rows"] for f in fus),
+            "max_fused_run": max(f["max_fused_run"] for f in fus),
+        }
+    return out
 
 
 @functools.lru_cache(maxsize=256)
@@ -382,6 +419,324 @@ def run_wave_merged(backend: str, msched: MergedTraceSchedule,
                        jnp.asarray(block_idx, _I32),
                        jnp.asarray(prog_idx, _I32), regs, shmem, gmem,
                        oob)
+
+
+# ---------------------------------------------------------------------------
+# segment megakernels: fused runs between global-port accesses
+# ---------------------------------------------------------------------------
+#
+# The scanned trace engine still pays per-row dispatch: a 10-way
+# ``lax.switch`` on the handler id plus traced decoded fields and a
+# recomputed active mask, every scan step. But every field of every row
+# is a HOST constant — so the megakernel engine unrolls each *segment*
+# (the maximal run of SM-local rows between global-port accesses; GLD/GST
+# rows serialize on the one device-wide port and so delimit segments)
+# body-to-body with constant fields and constant masks, and hands the
+# whole run to the ``ExecBackend.segment`` seam as ONE fused kernel. The
+# switch, the mask arithmetic and the operand selects fold away at trace
+# time; the Pallas implementation additionally keeps the SM batch's
+# registers/shmem resident in VMEM across the fused steps
+# (``kernels.simt_step.simt_segment``). Gmem rows between segments still
+# dispatch through the same per-row handlers as the scan.
+#
+# Functionally the megakernel engine IS the trace engine — same rows,
+# same handler graph (``executor.make_data_handlers``), same counters
+# from the static trace — so it is bit-identical to both other engines
+# by construction. Only compile strategy changes.
+
+def _active_mask(cfg: SMConfig, act_waves: int, act_wthreads: int
+                 ) -> np.ndarray:
+    """The (512,) flexible-ISA thread mask of one row, as a host
+    constant — exactly the scan body's per-step mask computation."""
+    tid = np.arange(MAX_THREADS)
+    lane = tid % N_SP
+    wave = tid // N_SP
+    return ((lane < act_wthreads) & (wave < act_waves)
+            & (tid < cfg.n_threads))
+
+
+def _fused_rows(sched: TraceSchedule) -> tuple:
+    """Lower a schedule's rows to host-constant ``executor.FusedRow``s."""
+    from .executor import FusedRow
+
+    cols = {f: np.asarray(sched.xs[f]) for f in _FIELDS}
+    rows = []
+    for i in range(sched.n_steps):
+        d = {f: np.int32(cols[f][i]) for f in
+             ("opcode", "typ", "rd", "ra", "rb", "imm", "x", "ext_a",
+              "ext_b")}
+        waves = int(cols["act_waves"][i])
+        wthreads = int(cols["act_wthreads"][i])
+        rows.append(FusedRow(
+            sel=int(cols["sel"][i]), d=d,
+            active=_active_mask(sched.cfg, waves, wthreads),
+            act_waves=waves, act_wthreads=wthreads))
+    return tuple(rows)
+
+
+_GMEM_SELS = (8, 9)        # GLD/GST data-switch branches (the global port)
+
+
+def _segment_items(rows, slot: int | None = None) -> tuple:
+    """Split a row sequence at global-port rows: ``("fused", slot, rows)``
+    runs as one fused kernel, ``("gmem", slot, row)`` dispatches the
+    serialized port row by itself."""
+    items, run = [], []
+    for r in rows:
+        if r.sel in _GMEM_SELS:
+            if run:
+                items.append(("fused", slot, tuple(run)))
+                run = []
+            items.append(("gmem", slot, r))
+        else:
+            run.append(r)
+    if run:
+        items.append(("fused", slot, tuple(run)))
+    return tuple(items)
+
+
+def _partial_eval_items(items, cfg_of, depth_of) -> tuple:
+    """Run the plan-time partial evaluator over a segment item list.
+
+    Threads per-slot register-column constant state (starting from the
+    zero-init wave contract: ``device.init_device_state`` always zeroes
+    registers) through the plan in execution order, wrapping every fused
+    payload in an ``executor.FusedSegment``. A GLD row makes its
+    destination runtime; GST reads only. ``cfg_of``/``depth_of`` map the
+    slot tag of each item to its SMConfig / shared-memory depth."""
+    from .executor import eval_segment_rows
+    from .machine import N_REGS
+
+    state: dict = {}
+    out = []
+    for kind, slot, payload in items:
+        cols = state.setdefault(
+            slot, [np.zeros(MAX_THREADS, np.uint32)] * N_REGS)
+        if kind == "fused":
+            seg, cols = eval_segment_rows(cfg_of(slot), payload, cols,
+                                          depth_of(slot))
+            state[slot] = cols
+            out.append((kind, slot, seg))
+        else:
+            if payload.sel == 8:                    # GLD: rd now runtime
+                cols = list(cols)
+                cols[int(payload.d["rd"])] = None
+                state[slot] = cols
+            out.append((kind, slot, payload))
+    return tuple(out)
+
+
+def _fusion_stats(items) -> dict:
+    segs = [it[2] for it in items if it[0] == "fused"]
+    return {
+        "segments": len(segs),
+        "fused_rows": sum(len(s.rows) for s in segs),
+        "folded_rows": sum(s.n_folded for s in segs),
+        "gmem_rows": sum(1 for it in items if it[0] == "gmem"),
+        "max_fused_run": max((len(s.rows) for s in segs), default=0),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelPlan:
+    """One program lowered to fused segments (megakernel engine unit).
+
+    ``items`` is the ordered execution plan; ``sched`` keeps the
+    underlying trace schedule for the timing model (cycle counters are
+    engine-independent — the megakernel is a functional-path
+    optimization only).
+    """
+
+    key: tuple                 # program words (the compile-cache key)
+    cfg: SMConfig
+    sched: TraceSchedule
+    items: tuple
+
+    @property
+    def halted(self) -> bool:
+        return self.sched.halted
+
+    def stats(self) -> dict:
+        return _fusion_stats(self.items)
+
+
+@functools.lru_cache(maxsize=256)
+def _megakernel_cached(words_key: tuple, cfg: SMConfig) -> MegakernelPlan:
+    sched = _compile_cached(words_key, cfg)
+    items = _partial_eval_items(
+        _segment_items(_fused_rows(sched)),
+        lambda _s: cfg, lambda _s: cfg.shmem_depth)
+    return MegakernelPlan(key=words_key, cfg=cfg, sched=sched, items=items)
+
+
+def compile_megakernel(program, cfg: SMConfig) -> MegakernelPlan:
+    """Lower ``program`` to a fused-segment megakernel plan for ``cfg``.
+
+    Cached like ``compile_program`` (and sharing its schedule cache); the
+    jitted runner is cached separately per (program, config, backend)."""
+    words = program.words if hasattr(program, "words") else program
+    return _megakernel_cached(tuple(int(w) for w in words), cfg)
+
+
+@functools.lru_cache(maxsize=256)
+def _megakernel_runner(words_key: tuple, cfg: SMConfig, backend_name: str):
+    """The jitted homogeneous-wave megakernel for one (program, config,
+    backend). The plan is closed over, not passed: its rows hold
+    unhashable host constants, and closing over it keys XLA's jit cache
+    on exactly (plan identity, batch shapes)."""
+    plan = _megakernel_cached(words_key, cfg)
+    backend = get_execute_backend(backend_name)
+
+    @jax.jit
+    def run(block_idx, prog_idx, regs, shmem, gmem, oob):
+        for kind, _, payload in plan.items:
+            if kind == "fused":
+                regs, shmem, oob = exec_segment(
+                    backend, cfg, payload, block_idx, prog_idx, regs,
+                    shmem, oob)
+            else:
+                handlers = make_data_handlers(cfg, backend, payload.d,
+                                              jnp.asarray(payload.active),
+                                              block_idx, prog_idx)
+                regs, shmem, gmem, oob = handlers[payload.sel](
+                    (regs, shmem, gmem, oob))
+        return regs, shmem, gmem, oob
+
+    return run
+
+
+def run_wave_megakernel(backend: str, plan: MegakernelPlan, block_idx,
+                        prog_idx, state):
+    """Megakernel replacement for ``run_wave_trace``: same DeviceState
+    in/out contract, same static-trace counters — only the functional
+    path changes (fused segments instead of a scanned schedule)."""
+    n = state.regs.shape[0]
+    fn = _megakernel_runner(plan.key, plan.cfg, backend)
+    regs, shmem, gmem, oob = fn(
+        jnp.asarray(block_idx, _I32), jnp.asarray(prog_idx, _I32),
+        state.regs, state.shmem, state.gmem, state.oob)
+    tr = plan.sched.trace
+    return state.replace(
+        regs=regs, shmem=shmem, gmem=gmem, oob=oob,
+        halted=state.halted | jnp.asarray(tr.halted),
+        steps=state.steps + jnp.int32(tr.steps),
+        cycles=state.cycles + jnp.int32(tr.static_cycles(n)),
+        cycles_by_class=state.cycles_by_class
+        + jnp.asarray(plan.sched.cycles_by_class(n), _I32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedMegakernelPlan:
+    """A heterogeneous wave's fused-segment plan.
+
+    Unlike ``MergedTraceSchedule`` there is NO padding: each slot's rows
+    fuse independently, and only the global-port rows impose a global
+    order — they drain in (scan step, program slot) lexicographic order,
+    exactly the merged scan's dispatch order, so cross-program
+    global-store drains stay bit-identical to the scan and the step
+    machine.
+    """
+
+    keys: tuple                # per-slot program words
+    cfgs: tuple[SMConfig, ...]
+    parts: tuple[TraceSchedule, ...]
+    items: tuple               # ("fused"|"gmem", slot, payload)
+
+    @property
+    def halted(self) -> bool:
+        return all(p.halted for p in self.parts)
+
+    @property
+    def n_steps(self) -> int:
+        """Longest participant's schedule (the merged scan's row count —
+        kept for profile continuity; the megakernel executes no padded
+        rows)."""
+        return max((p.n_steps for p in self.parts), default=0)
+
+    def stats(self) -> dict:
+        return _fusion_stats(self.items)
+
+
+@functools.lru_cache(maxsize=256)
+def _merged_megakernel_cached(keys: tuple, cfgs: tuple
+                              ) -> MergedMegakernelPlan:
+    parts = tuple(_compile_cached(k, c) for k, c in zip(keys, cfgs))
+    slot_rows = [_fused_rows(p) for p in parts]
+    # global-port rows must drain in the merged scan's dispatch order:
+    # (schedule step, slot order) — between them, different slots' rows
+    # touch disjoint per-SM state and commute, so each slot's runs fuse
+    # independently and flush only when one of its gmem rows comes due
+    events = sorted((i, k) for k, rows in enumerate(slot_rows)
+                    for i, r in enumerate(rows) if r.sel in _GMEM_SELS)
+    cursor = [0] * len(parts)
+    items = []
+    for i, k in events:
+        if cursor[k] < i:
+            items.append(("fused", k, tuple(slot_rows[k][cursor[k]:i])))
+        items.append(("gmem", k, slot_rows[k][i]))
+        cursor[k] = i + 1
+    for k, rows in enumerate(slot_rows):
+        if cursor[k] < len(rows):
+            items.append(("fused", k, tuple(rows[cursor[k]:])))
+    items = _partial_eval_items(
+        tuple(items), lambda s: cfgs[s], lambda s: cfgs[s].shmem_depth)
+    return MergedMegakernelPlan(keys=keys, cfgs=cfgs, parts=parts,
+                                items=items)
+
+
+def compile_merged_megakernel(programs, cfgs) -> MergedMegakernelPlan:
+    """Megakernel counterpart of ``compile_merged``: fuse each slot's
+    segments, ordering only the global-port rows across slots."""
+    keys = []
+    for p in programs:
+        words = p.words if hasattr(p, "words") else p
+        keys.append(tuple(int(w) for w in words))
+    return _merged_megakernel_cached(tuple(keys), tuple(cfgs))
+
+
+@functools.lru_cache(maxsize=256)
+def _merged_megakernel_runner(keys: tuple, cfgs: tuple,
+                              backend_name: str):
+    mplan = _merged_megakernel_cached(keys, cfgs)
+    backend = get_execute_backend(backend_name)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def run(counts, block_idx, prog_idx, regs, shmem, gmem, oob):
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        for kind, k, payload in mplan.items:
+            cfg = cfgs[k]
+            lo, hi = int(offs[k]), int(offs[k + 1])
+            if kind == "fused":
+                r_k, s_k, o_k = exec_segment(
+                    backend, cfg, payload, block_idx[lo:hi],
+                    prog_idx[lo:hi], regs[lo:hi], shmem[lo:hi],
+                    oob[lo:hi], shmem_depth=cfg.shmem_depth)
+            else:
+                handlers = make_data_handlers(
+                    cfg, backend, payload.d, jnp.asarray(payload.active),
+                    block_idx[lo:hi], prog_idx[lo:hi],
+                    shmem_depth=cfg.shmem_depth)
+                sub = (regs[lo:hi], shmem[lo:hi], gmem, oob[lo:hi])
+                r_k, s_k, gmem, o_k = handlers[payload.sel](sub)
+            regs = regs.at[lo:hi].set(r_k)
+            shmem = shmem.at[lo:hi].set(s_k)
+            oob = oob.at[lo:hi].set(o_k)
+        return regs, shmem, gmem, oob
+
+    return run
+
+
+def run_wave_merged_megakernel(backend: str, mplan: MergedMegakernelPlan,
+                               counts: tuple, block_idx, prog_idx, regs,
+                               shmem, gmem, oob):
+    """Run one heterogeneous wave on the megakernel engine. Same
+    slot-major member-ordering contract as ``run_wave_merged``; returns
+    (regs, shmem, gmem, oob)."""
+    fn = _merged_megakernel_runner(mplan.keys, mplan.cfgs, backend)
+    return fn(tuple(int(c) for c in counts),
+              jnp.asarray(block_idx, _I32), jnp.asarray(prog_idx, _I32),
+              regs, shmem, gmem, oob)
 
 
 def run_wave_trace(cfg: SMConfig, backend: str, sched: TraceSchedule,

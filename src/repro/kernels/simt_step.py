@@ -139,6 +139,61 @@ def simt_gather_shared(mem: jax.Array, addr: jax.Array, mask: jax.Array,
     )(mem, addr.astype(_I32), mask.astype(_U32), old)
 
 
+# ---------------------------------------------------------------------------
+# fused segment: a whole run of SM-local instructions in ONE kernel
+# ---------------------------------------------------------------------------
+
+def simt_segment(cfg, rows, block_idx, prog_idx, regs, shmem, oob, *,
+                 shmem_depth: int | None = None,
+                 interpret: bool = True):
+    """Megakernel fused segment: unroll ``rows`` body-to-body inside one
+    ``pallas_call``, keeping the SM's registers, shared memory and OOB
+    flag resident across every fused step instead of round-tripping
+    through HBM per instruction.
+
+    ``rows`` is the host-constant ``executor.FusedRow`` tuple of one
+    segment (SM-local ops only — the global port delimits segments). The
+    kernel body stages the SAME ``executor.apply_segment_rows`` handler
+    chain the inline backend runs, over the one-SM block the grid step
+    owns: (1, 512, 16) registers (32 KiB) + the (1, depth) shared image
+    + three lane tiles, comfortably inside a core's VMEM.
+
+    Not jitted here: ``rows`` is unhashable by design (numpy masks), and
+    every caller is already inside the megakernel runner's jit.
+    """
+    from ..core.executor import apply_segment_rows, get_execute_backend
+
+    inline = get_execute_backend("inline")
+    n_sm, depth = shmem.shape
+    n_regs = regs.shape[2]
+
+    def kernel(bidx_ref, pidx_ref, regs_ref, sh_ref, oob_ref,
+               regs_out, sh_out, oob_out):
+        r, s, o = apply_segment_rows(
+            cfg, inline, rows, bidx_ref[...], pidx_ref[...],
+            regs_ref[...], sh_ref[...], oob_ref[...] != 0,
+            shmem_depth=shmem_depth)
+        regs_out[...] = r
+        sh_out[...] = s
+        oob_out[...] = o.astype(_U32)
+
+    sm_spec = pl.BlockSpec((1,), lambda i: (i,))
+    regs_spec = pl.BlockSpec((1, N_THREADS, n_regs), lambda i: (i, 0, 0))
+    mem_spec = pl.BlockSpec((1, depth), lambda i: (i, 0))
+    regs_o, shmem_o, oob_o = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((n_sm, N_THREADS, n_regs), _U32),
+                   jax.ShapeDtypeStruct((n_sm, depth), _U32),
+                   jax.ShapeDtypeStruct((n_sm,), _U32)),
+        grid=(n_sm,),
+        in_specs=[sm_spec, sm_spec, regs_spec, mem_spec, sm_spec],
+        out_specs=(regs_spec, mem_spec, sm_spec),
+        interpret=interpret,
+    )(block_idx.astype(_I32), prog_idx.astype(_I32), regs, shmem,
+      oob.astype(_U32))
+    return regs_o, shmem_o, oob_o != 0
+
+
 def _scatter_shared_kernel(mem_ref, addr_ref, vals_ref, do_ref, out_ref):
     depth = mem_ref.shape[0]
     addr = addr_ref[...]                     # (n_sm * 512,) flattened

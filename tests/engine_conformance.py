@@ -160,7 +160,7 @@ CASES: dict[str, ConformanceCase] = {
                                        packings=_HET_PACKINGS),
 }
 
-ENGINES = ("step", "trace")
+ENGINES = ("step", "trace", "megakernel")
 SCHEDULES = ("static", "dynamic")
 BACKENDS = ("inline", "pallas")
 N_SMS = (1, 2, 4)

@@ -1,8 +1,9 @@
 """Cross-engine conformance matrix: every case of
 ``tests/engine_conformance.py`` swept over the packing x engine x
 schedule x backend x n_sms cube, asserted bit-identical against the
-inline step machine — the differential oracle both engines and both
-backends must match at the same (schedule, n_sms, packing) point.
+inline step machine — the differential oracle every engine (step,
+trace, megakernel) and both backends must match at the same
+(schedule, n_sms, packing) point.
 Comparing every cell against ONE oracle makes the matrix transitive:
 inline-trace, pallas-step and pallas-trace all collapse onto the same
 architectural state, so any engine/backend drift anywhere in the cube
@@ -59,8 +60,16 @@ def _oracle(name, schedule, n_sms, packing="grid"):
 def _cells():
     for backend in BACKENDS:
         for name, schedule, n_sms, packing in cube(backend):
-            engines = ("trace",) if backend == "inline" \
-                else ("step", "trace")
+            if backend == "inline":
+                engines = ("trace", "megakernel")
+            else:
+                # megakernel-Pallas traces one fused kernel per segment —
+                # slow under the interpreter, so cover it at each case's
+                # widest Pallas point instead of the full sub-cube
+                engines = ("step", "trace")
+                if (packing == "grid" and schedule == "static"
+                        and n_sms == CASES[name].pallas_sms[-1]):
+                    engines += ("megakernel",)
             for engine in engines:
                 yield name, schedule, backend, n_sms, engine, packing
 
@@ -81,8 +90,19 @@ def test_conformance_cube(name, schedule, backend, n_sms, engine, packing):
         # the launch-level aggregate really aggregates the per-wave stats
         assert merge["pad_overhead_total"] == \
             sum(w["padded_steps"] for w in merge["per_wave"])
+    if engine == "megakernel" and case.heterogeneous:
+        # merged megakernel waves execute NO padded rows — short members
+        # just stop fusing earlier; the only cross-slot coupling is the
+        # globally-ordered gmem drains, surfaced as fusion stats
+        merge = res.profile().get("trace_merge")
+        assert merge and merge["n_waves"] >= 1
+        assert merge["pad_overhead"] == 0.0
+        fus = merge["fusion"]
+        assert fus["segments"] >= 1 and fus["fused_rows"] > 0
+        assert 0 <= fus["folded_rows"] <= fus["fused_rows"]
+        assert fus["max_fused_run"] <= fus["fused_rows"]
     # full bit-identity (state + counters) against the packing-matched
-    # step-inline oracle: both engines and backends agree on the waves
+    # step-inline oracle: all engines and backends agree on the waves
     # that actually ran
     assert_bit_identical(res, _oracle(name, schedule, n_sms, packing))
     if packing != "grid":
@@ -144,9 +164,12 @@ def test_auto_engine_fallback_is_profile_visible():
 
 
 def test_auto_engine_merges_mixed_grids():
+    # auto's first choice is the megakernel — mixed grids take its merged
+    # heterogeneous path (fused slots + globally-ordered gmem drains)
     res = CASES["mixed_fft_qrd"].build("auto", "auto", "inline", 2, "grid")
-    assert res.engine == "trace" and res.engine_fallback is None
+    assert res.engine == "megakernel" and res.engine_fallback is None
     assert res.trace_merge is not None
+    assert res.trace_merge["fusion"]["fused_rows"] > 0
 
 
 def test_auto_packing_resolves_length_on_mixed_grids():
@@ -238,7 +261,7 @@ def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule,
     kerns = [Kernel(p, block=b, priority=pr)
              for p, b, pr in zip(progs, blocks, prios)]
     outs = {}
-    for engine in ("step", "trace"):
+    for engine in ("step", "trace", "megakernel"):
         dcfg = DeviceConfig(n_sms=n_sms, global_mem_depth=64,
                             engine=engine,
                             sm=SMConfig(shmem_depth=64, max_steps=500))
@@ -250,3 +273,4 @@ def test_fuzz_heterogeneous_grid_conformance(grid, seed, n_sms, schedule,
     if len(set(gmap)) > 1:
         assert outs["trace"].trace_merge is not None
     assert_bit_identical(outs["step"], outs["trace"])
+    assert_bit_identical(outs["step"], outs["megakernel"])

@@ -107,17 +107,23 @@ CASES["mixed_fft_qrd[4sm,dynamic,qrd-first]"] = \
     lambda: _mixed("dynamic", priorities=(0, 1), interleave=False)
 # heterogeneous launches pinned on EACH functional engine: timing comes
 # from the static traces either way, so the trace engine's merged waves
-# must report exactly the step machine's totals
+# (and the megakernel's fused segments) must report exactly the step
+# machine's totals — the megakernel is a functional-path optimization,
+# never a timing change
 CASES["mixed_fft_qrd[4sm,dynamic,trace-engine]"] = \
     lambda: _mixed("dynamic", engine="trace")
 CASES["mixed_fft_qrd[4sm,static,trace-engine]"] = \
     lambda: _mixed("static", engine="trace")
+CASES["mixed_fft_qrd[4sm,dynamic,megakernel-engine]"] = \
+    lambda: _mixed("dynamic", engine="megakernel")
+CASES["mixed_fft_qrd[4sm,static,megakernel-engine]"] = \
+    lambda: _mixed("static", engine="megakernel")
 # packed-mixed entries (wave packing is OPT-IN: every grid-order entry
 # above must stay byte-identical — a default-packing launch never sees
 # the packer). The backloaded grid is the pad-adversarial shape; pinning
 # BOTH engines pins that timing stays engine-independent under packing.
 for _n in (1, 2, 4):
-    for _e in ("step", "trace"):
+    for _e in ("step", "trace", "megakernel"):
         CASES[f"mixed_fft_qrd[{_n}sm,dynamic,packed,{_e}-engine]"] = \
             (lambda n=_n, e=_e: _mixed("dynamic", engine=e, n_sms=n,
                                        interleave=False,
@@ -128,13 +134,15 @@ for _n in (1, 2, 4):
                                        packing="length"))
 
 
+@pytest.mark.parametrize("engine", ["trace", "megakernel"])
 @pytest.mark.parametrize("packing", [None, "length"])
 @pytest.mark.parametrize("schedule", ["static", "dynamic"])
 def test_heterogeneous_trace_engine_reports_step_cycle_totals(schedule,
-                                                              packing):
-    tr = _mixed(schedule, engine="trace", packing=packing)
+                                                              packing,
+                                                              engine):
+    tr = _mixed(schedule, engine=engine, packing=packing)
     st = _mixed(schedule, engine="step", packing=packing)
-    assert tr.engine == "trace" and tr.trace_merge is not None
+    assert tr.engine == engine and tr.trace_merge is not None
     assert st.engine == "step"
     assert _record(tr) == _record(st)
 

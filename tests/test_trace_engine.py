@@ -181,10 +181,25 @@ def test_fuzz_trace_engine_matches_step_machine(words, seed, n_sms,
 # engine plumbing: auto selection, cache, runaway programs
 # ---------------------------------------------------------------------------
 
-def test_auto_engine_picks_trace_for_halting_programs():
+def test_auto_engine_picks_megakernel_for_halting_programs():
     prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
     res = launch(_dcfg(), prog, grid=(2,), block=16)
-    assert res.engine == "trace" and res.halted
+    assert res.engine == "megakernel" and res.halted
+    assert res.engine_fallback is None
+
+
+def test_auto_engine_degrades_to_trace_past_unroll_cap():
+    # a schedule longer than the megakernel unroll cap would compile an
+    # unboundedly large fused body — auto degrades to the scanned trace
+    # engine and says why
+    from repro.core import trace_engine
+
+    trip = trace_engine.MEGAKERNEL_UNROLL_CAP // 2 + 1
+    prog = assemble(f"INIT {trip}\ntop:\nTDX R1\nADD.INT32 R2, R1, R1\n"
+                    f"LOOP top\nSTOP")
+    res = launch(_dcfg(max_steps=3 * trip + 8), prog, grid=(1,), block=16)
+    assert res.engine == "trace"
+    assert res.profile()["engine_fallback"] == "megakernel-unroll-cap"
 
 
 def test_auto_engine_falls_back_to_step_for_runaway_programs():
@@ -213,6 +228,89 @@ def test_compile_cache_is_keyed_and_hit():
     assert compile_program(prog, cfg2) is not s1
     # NOP/control compiled out: only TDX + STO remain
     assert s1.n_steps == 2 and s1.halted
+
+
+@pytest.fixture
+def persistent_cache(tmp_path, monkeypatch):
+    """An isolated on-disk compile cache, torn down after the test (the
+    cache is opt-in: other tests must never see it)."""
+    from repro.core import compile_cache
+    from repro.core.cycles import _trace_cached
+
+    monkeypatch.setenv("EGPU_JAX_CACHE", "0")   # keep jax's cache out
+    cc = compile_cache.configure(str(tmp_path / "cache"))
+    _trace_cached.cache_clear()                 # force disk consultation
+    yield cc
+    compile_cache.configure(None)
+    _trace_cached.cache_clear()
+
+
+def test_persistent_cache_miss_then_hit(persistent_cache):
+    from repro.core.cycles import _trace_cached
+
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
+    tr1 = program_trace(prog, 16)
+    st = persistent_cache.stats
+    assert st.misses >= 1 and st.stores >= 1 and st.hits == 0
+    # a fresh process is simulated by clearing the in-memory LRU: the
+    # walk must now be SERVED from disk, not recomputed
+    _trace_cached.cache_clear()
+    tr2 = program_trace(prog, 16)
+    assert persistent_cache.stats.hits >= 1
+    assert tr2 == tr1                  # served artifact is the same walk
+    # a different config is a different key — miss, not a stale hit
+    _trace_cached.cache_clear()
+    program_trace(prog, 32)
+    assert persistent_cache.stats.misses >= 2
+
+
+def test_persistent_cache_corrupt_entry_is_miss_and_quarantined(
+        persistent_cache, tmp_path):
+    import os
+    import pickle
+
+    from repro.core import compile_cache
+    from repro.core.cycles import _trace_cached
+
+    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
+    program_trace(prog, 16)
+    entries = [os.path.join(r, f)
+               for r, _, fs in os.walk(persistent_cache.path)
+               for f in fs if f.endswith(".pkl")]
+    assert len(entries) == 1
+    # truncated garbage: load must be a counted error->miss, the entry
+    # unlinked, and the launch path never sees an exception
+    with open(entries[0], "wb") as fh:
+        fh.write(b"\x80\x04 truncated garbage")
+    _trace_cached.cache_clear()
+    tr = program_trace(prog, 16)
+    assert tr.halted and tr.steps == 3
+    st = persistent_cache.stats
+    assert st.errors >= 1
+    assert not os.path.exists(entries[0]) or \
+        compile_cache.load(compile_cache.key_for(
+            "trace", prog.words, (16, 512, 100_000))) is not None
+    # wrong-key (foreign) entries are rejected the same way
+    key = compile_cache.key_for("trace", prog.words, (16, 512, 100_000))
+    f = persistent_cache._file(key)
+    with open(f, "wb") as fh:
+        pickle.dump({"magic": "egpu-compile-cache", "format": 1,
+                     "key": "someone-else", "value": 42}, fh)
+    _trace_cached.cache_clear()
+    assert program_trace(prog, 16) == tr
+    assert persistent_cache.stats.errors >= 2
+
+
+def test_persistent_cache_disabled_without_configuration(tmp_path,
+                                                         monkeypatch):
+    from repro.core import compile_cache
+
+    monkeypatch.delenv("EGPU_CACHE_DIR", raising=False)
+    compile_cache.configure(None)
+    assert compile_cache.active() is None
+    assert compile_cache.load("deadbeef") is None
+    compile_cache.store("deadbeef", 1)          # silent no-op
+    assert compile_cache.stats() is None
 
 
 def test_bogus_engine_rejected():
