@@ -13,7 +13,7 @@ import sys
 
 def main() -> None:
     from . import (engine_bench, kernel_bench, roofline_bench,
-                   table1_resources, table3_fft, table4_qrd,
+                   serve_bench, table1_resources, table3_fft, table4_qrd,
                    table5_resources)
 
     print("name,us_per_call,derived")
@@ -23,13 +23,14 @@ def main() -> None:
     table5_resources.run()
     kernel_bench.run()
     engine_bench.run()
+    serve_bench.run()
     roofline_bench.run()
 
 
 def smoke() -> None:
     # importing every module is the point: a bitrotted benchmark fails here
     from . import (engine_bench, kernel_bench, roofline_bench,  # noqa: F401
-                   table1_resources, table3_fft, table4_qrd,
+                   serve_bench, table1_resources, table3_fft, table4_qrd,
                    table5_resources)
     import numpy as np
 
@@ -108,6 +109,11 @@ def smoke() -> None:
     # never losing on the mixed line); also times the persistent
     # compile cache's cold-vs-warm lowering
     engine_bench.run(smoke=True)
+    # the serving front door under open-loop mixed FFT+QRD traffic;
+    # writes BENCH_serve.json and gates CI on continuous batching
+    # beating serial one-launch-at-a-time dispatch >= 1.2x in
+    # requests/sec (plus the deterministic modeled-makespan bound)
+    serve_bench.run(smoke=True)
     print("smoke_ok,0.0,all benchmark entry points importable")
 
 

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Mapping, Sequence
 
 import jax
@@ -139,12 +140,22 @@ class DeviceConfig:
                                       # default) | "length" pad-minimal
                                       # waves | "auto" (length for mixed
                                       # grids — see core.packing)
+    dispatch_latency: int = 0         # host cycles to dispatch one launch
+                                      # (arXiv 2401.04261's host dispatch
+                                      # latency; 0 = free, the pre-serving
+                                      # model)
+    queue_latency: int = 0            # extra host cycles per entry sitting
+                                      # in the launch queue at dispatch
+                                      # time (launch(queue_depth=) — the
+                                      # LaunchServer wires this up)
 
     def __post_init__(self):
         if self.n_sms < 1:
             raise ValueError(f"n_sms={self.n_sms} must be >= 1")
         if self.global_mem_depth < 1:
             raise ValueError("global_mem_depth must be >= 1")
+        if self.dispatch_latency < 0 or self.queue_latency < 0:
+            raise ValueError("dispatch_latency/queue_latency must be >= 0")
         if self.schedule not in SCHEDULES + ("auto",):
             raise ValueError(f"schedule={self.schedule!r} must be one of "
                              f"{SCHEDULES + ('auto',)}")
@@ -463,6 +474,12 @@ class LaunchResult:
     trace_merge: dict[str, Any] | None = None  # heterogeneous-wave stats
     packing: str = "grid"               # resolved wave-packing policy
     wave_packing: WavePacking | None = None  # the membership decision
+    host_dispatch: dict[str, int] | None = None  # launch-queue/dispatch
+                                        # latency model (non-None exactly
+                                        # when the device models it)
+    priority_respected: bool = True     # False iff Kernel(priority=) was
+                                        # requested but the static wave
+                                        # schedule ignored it
 
     @property
     def n_blocks(self) -> int:
@@ -511,6 +528,7 @@ class LaunchResult:
             "engine": self.engine,
             "engine_fallback": self.engine_fallback,
             "packing": self.packing,
+            "priority_respected": self.priority_respected,
             "n_waves": self.n_waves,
             "wave_cycles": [int(c) for c in self.wave_cycles],
             "by_class": {n: int(c) for n, c in zip(isa.CLASS_NAMES, by)},
@@ -519,6 +537,8 @@ class LaunchResult:
         }
         if self.trace_merge is not None:
             out["trace_merge"] = self.trace_merge
+        if self.host_dispatch is not None:
+            out["host_dispatch"] = dict(self.host_dispatch)
         t = self.timing
         if t is None:
             return out
@@ -551,6 +571,26 @@ class LaunchResult:
         out["static_cycles"] = int(self.static_cycles) \
             if self.static_cycles is not None else int(self.cycles)
         return out
+
+
+_STATIC_PRIORITY_WARNED = False
+
+
+def _warn_static_priority() -> None:
+    """Warn (once per process) that Kernel(priority=) was silently lost:
+    the static wave schedule dispatches in grid order by definition, so a
+    prioritized launch run static gets FIFO treatment. The condition is
+    also surfaced per launch as profile()["priority_respected"]."""
+    global _STATIC_PRIORITY_WARNED
+    if _STATIC_PRIORITY_WARNED:
+        return
+    _STATIC_PRIORITY_WARNED = True
+    warnings.warn(
+        "Kernel(priority=) is ignored under schedule='static': waves "
+        "dispatch in grid order. Use schedule='dynamic' (or 'auto' on a "
+        "multi-program grid) for priority-aware dispatch; see "
+        "LaunchResult.profile()['priority_respected'].",
+        UserWarning, stacklevel=3)
 
 
 def _resolve_schedule(schedule: str | None, dcfg: DeviceConfig,
@@ -619,7 +659,8 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
            backend: str | None = None, dim_x: int | None = None,
            schedule: str | None = None,
            engine: str | None = None,
-           packing: str | None = None) -> LaunchResult:
+           packing: str | None = None,
+           queue_depth: int = 0) -> LaunchResult:
     """CUDA-style kernel launch on the multi-SM device.
 
     Two forms:
@@ -702,6 +743,17 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     ``Kernel(barrier=True)`` to fence cross-block dataflow. Packing
     therefore only changes which blocks share a wave (and with it the
     modeled timing and merge padding), never observable state.
+
+    ``queue_depth`` is the launch-queue depth at dispatch time — how many
+    launches (including this one) the host had queued when it dispatched
+    this one. The launch is charged ``dcfg.dispatch_latency +
+    dcfg.queue_latency * queue_depth`` host cycles before any block
+    issues (``scheduler.schedule_blocks(start_cycle=)``), modeling the
+    dispatch path arXiv 2401.04261 measures; the charge is surfaced as
+    ``profile()["host_dispatch"]``. The serving front door
+    (``serve.LaunchServer``) wires its admission-queue depth in here;
+    with the default zero latencies the model is free and the profile key
+    is absent — bit-identical to the pre-serving device.
     """
     # ---- normalize to kernels + grid_map --------------------------------
     if programs is not None:
@@ -735,6 +787,25 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     n_blocks = int(gmap.shape[0])
     backend = backend or dcfg.backend
     mode = _resolve_schedule(schedule, dcfg, len(kernels))
+
+    # ---- host dispatch latency (the launch-queue model) ------------------
+    if queue_depth < 0:
+        raise ValueError(f"queue_depth={queue_depth} must be >= 0")
+    host_latency = dcfg.dispatch_latency + dcfg.queue_latency * queue_depth
+    host_dispatch = None
+    if dcfg.dispatch_latency or dcfg.queue_latency:
+        host_dispatch = {
+            "queue_depth": int(queue_depth),
+            "dispatch_cycles": int(dcfg.dispatch_latency),
+            "queue_cycles": int(dcfg.queue_latency * queue_depth),
+            "latency_cycles": int(host_latency),
+        }
+
+    # ---- priority visibility: static waves ignore Kernel(priority=) -----
+    prioritized = any(k.priority for k in kernels)
+    priority_respected = (mode == "dynamic") or not prioritized
+    if prioritized and mode == "static":
+        _warn_static_priority()
 
     # ---- per-program static resources -----------------------------------
     names: list[str] = []
@@ -815,13 +886,14 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     timing = schedule_blocks(block_traces, dcfg.n_sms, mode,
                              phase_of=block_phase,
                              priority_of=block_priority,
-                             packing=wp)
+                             packing=wp, start_cycle=host_latency)
     if mode == "static":
         static_span = timing.makespan
     else:
         static_span = schedule_blocks(block_traces, dcfg.n_sms, "static",
                                       phase_of=block_phase,
-                                      packing=wp).makespan
+                                      packing=wp,
+                                      start_cycle=host_latency).makespan
 
     # ---- global-memory image --------------------------------------------
     offsets = None
@@ -987,8 +1059,9 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     # ---- aggregate counters ---------------------------------------------
     if mode == "static" and len(kernels) == 1:
         # the lockstep fast path: one program, shared sequencer per wave —
-        # report the batch machine's own counters (bit-identical to PR 1)
-        cycles = int(sum(wave_cycles))
+        # report the batch machine's own counters (bit-identical to PR 1;
+        # the host-dispatch charge precedes the first wave)
+        cycles = int(sum(wave_cycles)) + int(host_latency)
         steps = int(sum(wave_steps))
         by_class = machine_by
         waves_out = np.asarray(wave_cycles, np.int64)
@@ -1026,4 +1099,6 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         trace_merge=merge_stats,
         packing=wp.policy,
         wave_packing=wp,
+        host_dispatch=host_dispatch,
+        priority_respected=priority_respected,
     )

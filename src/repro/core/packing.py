@@ -104,6 +104,17 @@ class WavePacking:
     def wave_sizes(self) -> tuple[int, ...]:
         return tuple(len(w) for w in self.waves)
 
+    @property
+    def occupancy(self) -> float:
+        """Mean wave fill fraction: members per wave over ``n_sms``,
+        averaged across waves. 1.0 means every wave used every SM slot —
+        the batch-occupancy figure the serving front door reports per
+        dispatched batch (``serve.LaunchServer``)."""
+        if not self.waves:
+            return 0.0
+        return sum(len(w) for w in self.waves) / (self.n_sms
+                                                  * len(self.waves))
+
     def pad_steps(self) -> int:
         """Total padded scan steps: rows a member idles while its wave
         drains the longest participant, summed over waves — the metric

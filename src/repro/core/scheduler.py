@@ -107,7 +107,8 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
                     mode: str,
                     phase_of: Sequence[int] | None = None,
                     priority_of: Sequence[int] | None = None,
-                    packing: WavePacking | None = None) -> Schedule:
+                    packing: WavePacking | None = None,
+                    start_cycle: int = 0) -> Schedule:
     """Schedule ``traces[b]`` (one per block, in grid order) onto ``n_sms``
     SMs under the given discipline.
 
@@ -133,11 +134,22 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     never loses to serial waves chunked from order X, but it can lose to
     waves chunked from a different one). ``packing=None`` is grid order,
     bit-identical to the pre-packing scheduler.
+
+    ``start_cycle`` (non-negative) delays the whole launch: no block
+    issues before it. This is the host-dispatch model of the serving
+    front door (arXiv 2401.04261 measures exactly this launch-queue
+    latency): ``device.launch`` converts its launch-queue depth into a
+    start offset, so the stall shows up as SM *idle* time at the head of
+    the schedule and in the makespan — never as per-block busy or port
+    cycles. ``start_cycle=0`` (the default) is bit-identical to the
+    pre-serving scheduler.
     """
     if mode not in SCHEDULES:
         raise ValueError(f"schedule mode {mode!r} not in {SCHEDULES}")
     if n_sms < 1:
         raise ValueError(f"n_sms={n_sms} must be >= 1")
+    if start_cycle < 0:
+        raise ValueError(f"start_cycle={start_cycle} must be >= 0")
     n_blocks = len(traces)
     if priority_of is None:
         prio = np.zeros(n_blocks, np.int64)
@@ -177,7 +189,9 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
         if mode == "static":
             # the packed wave rule: membership comes from the packing,
             # waves run back to back in packed (phase-major) order
-            return _schedule_static(traces, n_sms, waves=packing.waves)
+            return _shift(_schedule_static(traces, n_sms,
+                                           waves=packing.waves),
+                          start_cycle)
         # dynamic: the packed order replaces grid order as the FIFO
         # tiebreak; rank[b] = b's position in the packed dispatch order
         rank = np.empty(n_blocks, np.int64)
@@ -189,7 +203,7 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     else:
         sim = _schedule_dynamic
     if phase_of is None:
-        return sim(traces, n_sms, prio, rank)
+        return _shift(sim(traces, n_sms, prio, rank), start_cycle)
     parts = [np.flatnonzero(phase == p) for p in np.unique(phase)]
     sm = np.zeros(n_blocks, np.int64)
     start = np.zeros(n_blocks, np.int64)
@@ -198,7 +212,7 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
     wait = np.zeros(n_blocks, np.int64)
     gmem = np.zeros(n_blocks, np.int64)
     waves: list[int] = []
-    t0 = 0
+    t0 = int(start_cycle)
     for idx in parts:
         s = sim([traces[i] for i in idx], n_sms, prio[idx], rank[idx])
         sm[idx] = s.block_sm
@@ -213,6 +227,19 @@ def schedule_blocks(traces: Sequence[ProgramTrace], n_sms: int,
                     block_sm=sm, block_start=start, block_finish=finish,
                     block_busy=busy, block_wait=wait, block_gmem=gmem,
                     wave_cycles=np.asarray(waves, np.int64))
+
+
+def _shift(s: Schedule, start_cycle: int) -> Schedule:
+    """Delay a whole schedule by ``start_cycle`` host-dispatch cycles:
+    every block's issue/retire moves right, the makespan absorbs the
+    stall as leading SM idle time, and per-block busy/wait/gmem are
+    untouched (the host, not the port, is what's slow)."""
+    if not start_cycle:
+        return s
+    return dataclasses.replace(
+        s, makespan=s.makespan + int(start_cycle),
+        block_start=s.block_start + int(start_cycle),
+        block_finish=s.block_finish + int(start_cycle))
 
 
 def _schedule_static(traces: Sequence[ProgramTrace], n_sms: int,

@@ -1,4 +1,22 @@
-"""Serving substrate: continuous-batching engine (flexible active mask)."""
-from .engine import Engine, Request
+"""Serving substrate: continuous batching at two levels.
 
-__all__ = ["Engine", "Request"]
+``Engine``/``Request``: the slot-based LM decode engine (flexible active
+mask over a fixed-capacity batch). ``LaunchServer``/``LaunchRequest``:
+the device-level front door — asynchronous kernel-launch admission,
+priority-aware continuous batching into merged heterogeneous waves, and
+the launch-queue/dispatch-latency cycle model.
+"""
+from .engine import FINISH_REASONS, Engine, Request
+from .launch_server import (
+    ADMISSIONS,
+    LaunchRequest,
+    LaunchServer,
+    QueueFull,
+    ServeResult,
+)
+
+__all__ = [
+    "Engine", "Request", "FINISH_REASONS",
+    "LaunchServer", "LaunchRequest", "ServeResult", "QueueFull",
+    "ADMISSIONS",
+]

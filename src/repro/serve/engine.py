@@ -23,14 +23,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
+FINISH_REASONS = ("eos", "budget", "capacity", "unadmitted")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray               # (S,) int32
-    max_new_tokens: int = 16
+    max_new_tokens: int = 16         # budget for ALL emitted tokens,
+                                     # including the prefill-sampled first
     eos_id: int = -1                 # -1: never
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str | None = None  # one of FINISH_REASONS once done
+                                      # ("unadmitted": never got a slot)
+
+    def _finish(self, reason: str) -> None:
+        self.done = True
+        self.finish_reason = reason
 
 
 class Engine:
@@ -70,7 +80,17 @@ class Engine:
 
     # ---- slot management ------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Admit a request; queues it if all slots are busy."""
+        """Admit a request; queues it if all slots are busy.
+
+        The request is registered in ``self.requests`` immediately — a
+        queued request that never gets a slot still appears in
+        ``run_until_done``'s results (``finish_reason="unadmitted"``)
+        instead of being silently dropped.
+        """
+        self.requests[req.rid] = req
+        if req.max_new_tokens <= 0:
+            req._finish("budget")        # zero budget: emit nothing
+            return True
         free = np.flatnonzero(~self.active)
         if free.size == 0:
             self.pending.append(req)
@@ -114,13 +134,22 @@ class Engine:
             is_leaf=lambda x: isinstance(x, jax.Array))
         if "pos" in self.caches:
             pass  # engine tracks positions host-side
+        first = int(np.argmax(np.asarray(last_logits)[0]))
+        req.out.append(first)
+        # the prefill-sampled token spends budget too: a request emits at
+        # most max_new_tokens tokens TOTAL (the old code budgeted the
+        # decode loop separately and emitted max_new_tokens + 1)
+        if first == req.eos_id:
+            req._finish("eos")
+            return True
+        if req.max_new_tokens == 1:
+            req._finish("budget")
+            return True
         self.active[slot] = True
         self.positions[slot] = len(req.prompt)
-        self.budget[slot] = req.max_new_tokens
+        self.budget[slot] = req.max_new_tokens - 1
         self.eos[slot] = req.eos_id
-        self.last_token[slot] = int(np.argmax(np.asarray(last_logits)[0]))
-        req.out.append(int(self.last_token[slot]))
-        self.requests[req.rid] = req
+        self.last_token[slot] = first
         self.slot_of[req.rid] = slot
         return True
 
@@ -147,9 +176,16 @@ class Engine:
             req.out.append(tok)
             self.positions[slot] += 1
             self.budget[slot] -= 1
-            if tok == self.eos[slot] or self.budget[slot] <= 0 \
-                    or self.positions[slot] >= self.capacity - 1:
-                req.done = True
+            if tok == self.eos[slot]:
+                reason = "eos"
+            elif self.budget[slot] <= 0:
+                reason = "budget"
+            elif self.positions[slot] >= self.capacity - 1:
+                reason = "capacity"      # cache rows exhausted: truncated
+            else:
+                reason = None
+            if reason is not None:
+                req._finish(reason)
                 self.active[slot] = False
                 del self.slot_of[rid]
             else:
@@ -158,8 +194,20 @@ class Engine:
         return n_active
 
     def run_until_done(self, max_steps: int = 10_000):
+        """Decode until every request finishes (or ``max_steps`` runs
+        out). Returns ``{rid: out_tokens}`` over EVERY submitted request
+        — queued requests that never reached a slot are included with
+        ``finish_reason="unadmitted"`` (requests still mid-decode when
+        the step budget ran out keep ``done=False``)."""
         for _ in range(max_steps):
             self.step()
             if not self.active.any() and not self.pending:
                 break
+        for req in self.pending:
+            if not req.done:
+                req._finish("unadmitted")
         return {rid: r.out for rid, r in self.requests.items()}
+
+    def finish_reasons(self) -> dict[int, str | None]:
+        """Per-request termination cause (see ``FINISH_REASONS``)."""
+        return {rid: r.finish_reason for rid, r in self.requests.items()}

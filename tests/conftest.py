@@ -41,6 +41,11 @@ def pytest_configure(config):
         "packing: wave-packing property suite — pad-minimality, "
         "packing-invariance, dynamic<=static under the packed wave rule "
         "(CI runs it standalone via `pytest -m packing`)")
+    config.addinivalue_line(
+        "markers",
+        "serve: serving-layer suite — decode-engine budget/admission "
+        "regressions and the LaunchServer continuous-batching front door "
+        "(CI runs it standalone via `pytest -m serve`)")
 
 try:
     import hypothesis  # noqa: F401

@@ -115,7 +115,7 @@ def test_engine_serves_ssm_arch():
     eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4),
                        max_new_tokens=3))
     outs = eng.run_until_done()
-    assert len(outs[0]) == 6 and len(outs[1]) == 4
+    assert len(outs[0]) == 5 and len(outs[1]) == 3   # == max_new_tokens
     assert all(0 <= t for v in outs.values() for t in v)
 
 

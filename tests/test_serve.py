@@ -1,0 +1,417 @@
+"""Serving-layer suite (``pytest -m serve``).
+
+Covers both serving levels:
+
+* the slot-based decode ``Engine`` — the two PR 7 bugfix regressions
+  (budget off-by-one that emitted ``max_new_tokens + 1`` tokens; queued
+  requests silently dropped from results) plus the full
+  eos/budget/capacity termination story, slot reuse, and FIFO queued
+  admission;
+* the device-level ``LaunchServer`` — continuous-batching correctness
+  against numpy references, deterministic virtual-time accounting (same
+  trace => same per-request cycle counts), priority-aware admission,
+  backpressure under both admission policies, solo dispatch of
+  buffer-carrying requests, the threaded batcher, and the host
+  dispatch-latency cycle model surfaced through ``profile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import DeviceConfig, SMConfig, launch
+from repro.core.programs.fft import bitrev_indices, fft_kernel, fft_shmem
+from repro.core.programs.qrd import Q_BASE, R_BASE, qrd_kernel, qrd_shmem
+from repro.models import build_model
+from repro.serve import Engine, LaunchRequest, LaunchServer, QueueFull, Request
+
+pytestmark = pytest.mark.serve
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# decode engine: termination + admission
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_arch("granite-3-2b", smoke=True)
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _prompt(cfg, rng, n):
+    return rng.integers(0, cfg.vocab_size, n)
+
+
+def test_budget_counts_all_emitted_tokens(lm):
+    """PR 7 regression: max_new_tokens bounds ALL emitted tokens. The
+    pre-fix engine budgeted the decode loop separately from the
+    prefill-sampled first token and emitted max_new_tokens + 1."""
+    cfg, model, params = lm
+    eng = Engine(model, params, max_slots=2, capacity=64)
+    rng = np.random.default_rng(0)
+    for rid, budget in enumerate((3, 1, 0)):
+        eng.submit(Request(rid=rid, prompt=_prompt(cfg, rng, 4 + rid),
+                           max_new_tokens=budget))
+    outs = eng.run_until_done()
+    assert len(outs[0]) == 3            # pre-fix: 4
+    assert len(outs[1]) == 1            # prefill token alone spends it all
+    assert len(outs[2]) == 0            # zero budget emits nothing
+    assert all(r.finish_reason == "budget" for r in eng.requests.values())
+
+
+def test_unadmitted_requests_are_reported(lm):
+    """PR 7 regression: a queued request that never reaches a slot must
+    appear in the results with finish_reason='unadmitted'. The pre-fix
+    engine only registered requests on slot admission, so run_until_done
+    silently dropped it."""
+    cfg, model, params = lm
+    eng = Engine(model, params, max_slots=1, capacity=64)
+    rng = np.random.default_rng(1)
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, rng, 4),
+                       max_new_tokens=50))
+    eng.submit(Request(rid=1, prompt=_prompt(cfg, rng, 5),
+                       max_new_tokens=2))
+    outs = eng.run_until_done(max_steps=3)   # rid 0 hogs the only slot
+    assert sorted(outs) == [0, 1]            # pre-fix: rid 1 absent
+    assert not eng.requests[0].done          # mid-decode, not finished
+    assert eng.requests[1].finish_reason == "unadmitted"
+    assert outs[1] == []
+
+
+def test_eos_termination(lm):
+    """Replaying a decoded token as eos_id stops the request early with
+    finish_reason='eos' — and the emitted prefix is unchanged (greedy
+    decode is deterministic)."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(2)
+    prompt = _prompt(cfg, rng, 6)
+
+    ref = Engine(model, params, max_slots=1, capacity=64)
+    ref.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    toks = ref.run_until_done()[0]
+    assert ref.requests[0].finish_reason == "budget" and len(toks) == 6
+
+    eos = toks[1]
+    eng = Engine(model, params, max_slots=1, capacity=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6, eos_id=eos))
+    out = eng.run_until_done()[0]
+    assert eng.requests[0].finish_reason == "eos"
+    assert out[-1] == eos
+    assert out == toks[:len(out)]            # same greedy prefix
+    assert len(out) == toks.index(eos) + 1   # stops at FIRST occurrence
+
+
+def test_capacity_termination(lm):
+    """Cache-row exhaustion truncates the request with
+    finish_reason='capacity' instead of decoding past the KV rows."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(3)
+    eng = Engine(model, params, max_slots=1, capacity=16)
+    eng.submit(Request(rid=0, prompt=_prompt(cfg, rng, 8),
+                       max_new_tokens=50))
+    out = eng.run_until_done()[0]
+    assert eng.requests[0].finish_reason == "capacity"
+    # prefill token + decode up to position capacity-1: 8 tokens, not 50
+    assert len(out) == 8
+
+
+def test_slot_reuse_after_completion(lm):
+    """More requests than slots all complete: freed slots are reused."""
+    cfg, model, params = lm
+    eng = Engine(model, params, max_slots=2, capacity=64)
+    rng = np.random.default_rng(4)
+    for rid in range(5):
+        eng.submit(Request(rid=rid, prompt=_prompt(cfg, rng, 3 + rid),
+                           max_new_tokens=3))
+    outs = eng.run_until_done()
+    assert sorted(outs) == list(range(5))
+    assert all(len(v) == 3 for v in outs.values())
+    assert all(r.finish_reason == "budget" for r in eng.requests.values())
+    assert max(eng.active_history) <= 2      # never more than the slots
+    assert not eng.active.any() and not eng.slot_of and not eng.pending
+
+
+def test_queued_admission_is_fifo(lm):
+    """Queued requests take the freed slot in submission order."""
+    cfg, model, params = lm
+    eng = Engine(model, params, max_slots=1, capacity=64)
+    rng = np.random.default_rng(5)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=_prompt(cfg, rng, 4),
+                           max_new_tokens=3))
+    order = [next(iter(eng.slot_of))]
+    for _ in range(20):
+        if not eng.active.any() and not eng.pending:
+            break
+        eng.step()
+        for rid in eng.slot_of:
+            if rid != order[-1]:
+                order.append(rid)
+    assert order == [0, 1, 2]
+    assert all(r.done for r in eng.requests.values())
+
+
+# ---------------------------------------------------------------------------
+# LaunchServer: continuous batching of device launches
+# ---------------------------------------------------------------------------
+
+def _small_dcfg(**kw):
+    """Tiny device for FFT-16 traffic (block of 8 threads)."""
+    sm = SMConfig(shmem_depth=64, max_steps=200_000)
+    return DeviceConfig(n_sms=2, global_mem_depth=128, sm=sm, **kw)
+
+
+def _fft16_req(rng, **kw):
+    x = (rng.standard_normal(16)
+         + 1j * rng.standard_normal(16)).astype(np.complex64)
+    return x, LaunchRequest(kernel=fft_kernel(16),
+                            shmem=fft_shmem(x, 64), **kw)
+
+
+def _fft_out(r, n):
+    mem = np.asarray(r.shmem_f32())[0]
+    out = np.empty(n, np.complex64)
+    out[bitrev_indices(n)] = mem[0:2 * n:2] + 1j * mem[1:2 * n:2]
+    return out
+
+
+def test_launch_server_merges_heterogeneous_batch():
+    """FFT-64 and QRD-16 tenants coalesce into ONE merged launch and
+    every request gets its own correct result slice back."""
+    dcfg = DeviceConfig(
+        n_sms=4, global_mem_depth=64,
+        sm=SMConfig(shmem_depth=1024, imem_depth=1024, max_steps=200_000))
+    server = LaunchServer(dcfg, max_batch=8)
+    rng = np.random.default_rng(0)
+    xs = [(rng.standard_normal(64)
+           + 1j * rng.standard_normal(64)).astype(np.complex64)
+          for _ in range(3)]
+    As = [rng.standard_normal((16, 16)).astype(np.float32) for _ in range(2)]
+    futs = [server.submit(LaunchRequest(kernel=fft_kernel(64),
+                                        shmem=fft_shmem(x, 1024)))
+            for x in xs]
+    futs += [server.submit(LaunchRequest(kernel=qrd_kernel(),
+                                         shmem=qrd_shmem(a, 1024)))
+             for a in As]
+    assert server.drain() == 5
+    results = [f.result() for f in futs]
+    assert all(r.batch_size == 5 and r.batch_id == 0 for r in results)
+    for x, r in zip(xs, results[:3]):
+        np.testing.assert_allclose(_fft_out(r, 64), np.fft.fft(x),
+                                   atol=1e-4)
+    for a, r in zip(As, results[3:]):
+        mem = np.asarray(r.shmem_f32())[0]
+        q = mem[Q_BASE:Q_BASE + 256].reshape(16, 16).T
+        rr = mem[R_BASE:R_BASE + 256].reshape(16, 16)
+        np.testing.assert_allclose(q @ rr, a, atol=1e-4)
+    # the cycle story is consistent and the profile rode along
+    for r in results:
+        assert r.latency_cycles == r.wait_cycles + r.cycles
+        assert r.finish_cycle == r.dispatch_cycle + r.cycles
+        assert r.profile["schedule"] in ("static", "dynamic")
+    s = server.stats()
+    assert s["batches"] == 1 and s["completed"] == 5 and s["pending"] == 0
+
+
+def _serve_trace(server):
+    """Submit a fixed 6-request FFT-16 trace with arrivals + priorities;
+    returns the ServeResults in submission order."""
+    rng = np.random.default_rng(7)
+    futs = []
+    for arrival, prio in ((0, 0), (100, 0), (5000, 2), (5100, 0),
+                          (5200, 0), (20000, 1)):
+        kern = fft_kernel(16)
+        if prio:
+            kern = dataclasses.replace(kern, priority=prio)
+        x = (rng.standard_normal(16)
+             + 1j * rng.standard_normal(16)).astype(np.complex64)
+        futs.append(server.submit(LaunchRequest(
+            kernel=kern, shmem=fft_shmem(x, 64), arrival_cycle=arrival)))
+    server.drain()
+    return [f.result() for f in futs]
+
+
+def test_launch_server_determinism():
+    """Same request trace => same per-request cycle counts, batch by
+    batch — the virtual clock is wall-clock independent."""
+    a = _serve_trace(LaunchServer(_small_dcfg(), max_batch=4,
+                                  schedule="dynamic"))
+    b = _serve_trace(LaunchServer(_small_dcfg(), max_batch=4,
+                                  schedule="dynamic"))
+    for ra, rb in zip(a, b):
+        assert (ra.cycles, ra.wait_cycles, ra.latency_cycles,
+                ra.dispatch_cycle, ra.finish_cycle, ra.batch_id,
+                ra.batch_size) == \
+               (rb.cycles, rb.wait_cycles, rb.latency_cycles,
+                rb.dispatch_cycle, rb.finish_cycle, rb.batch_id,
+                rb.batch_size)
+    # arrivals are honored: nobody dispatches before arriving
+    assert all(r.dispatch_cycle >= r.arrival_cycle for r in a)
+
+
+def test_priority_enters_earlier_batch():
+    """A high-priority tenant submitted LAST still rides the FIRST batch
+    (admission ordering), ahead of earlier normal requests."""
+    server = LaunchServer(_small_dcfg(), max_batch=2, schedule="dynamic")
+    rng = np.random.default_rng(8)
+    futs = [server.submit(_fft16_req(rng, arrival_cycle=0)[1])
+            for _ in range(3)]
+    kern = dataclasses.replace(fft_kernel(16), priority=5)
+    x = (rng.standard_normal(16)
+         + 1j * rng.standard_normal(16)).astype(np.complex64)
+    prio_fut = server.submit(LaunchRequest(kernel=kern,
+                                           shmem=fft_shmem(x, 64),
+                                           arrival_cycle=0))
+    server.drain()
+    prio = prio_fut.result()
+    normals = [f.result() for f in futs]
+    assert prio.batch_id == 0                       # jumped the line
+    assert sorted(r.batch_id for r in normals) == [0, 1, 1]
+    # in-launch the same field reaches the dynamic dispatch heap
+    assert prio.profile["priority_respected"] is True
+    np.testing.assert_allclose(_fft_out(prio, 16), np.fft.fft(x), atol=1e-4)
+
+
+def test_backpressure_reject():
+    server = LaunchServer(_small_dcfg(), max_queue=2, admission="reject")
+    rng = np.random.default_rng(9)
+    server.submit(_fft16_req(rng)[1])
+    server.submit(_fft16_req(rng)[1])
+    with pytest.raises(QueueFull):
+        server.submit(_fft16_req(rng)[1])
+    assert server.stats()["rejected"] == 1
+    assert server.drain() == 2
+
+
+def test_backpressure_block_dispatches_inline():
+    """Under admission='block' with no batcher thread, an over-full
+    submit makes its own progress by dispatching a batch inline."""
+    server = LaunchServer(_small_dcfg(), max_queue=2, admission="block",
+                          max_batch=2)
+    rng = np.random.default_rng(10)
+    futs = [server.submit(_fft16_req(rng)[1]) for _ in range(3)]
+    # the third submit had to dispatch the first batch to find room
+    assert futs[0].done() and futs[1].done()
+    assert server.queue_depth == 1
+    server.drain()
+    assert all(f.result().oob.any() == False for f in futs)  # noqa: E712
+    assert server.stats()["rejected"] == 0
+
+
+def test_buffer_requests_dispatch_solo():
+    """A request carrying a private gmem image never merges with other
+    tenants — it heads its own batch of 1 and gets gmem back."""
+    server = LaunchServer(_small_dcfg(), max_batch=8)
+    rng = np.random.default_rng(11)
+    f_a = server.submit(_fft16_req(rng)[1])
+    f_b = server.submit(_fft16_req(rng)[1])
+    x, req = _fft16_req(rng)
+    scratch = np.arange(16, dtype=np.uint32)
+    f_solo = server.submit(dataclasses.replace(
+        req, buffers={"scratch": scratch}))
+    f_d = server.submit(_fft16_req(rng)[1])
+    server.drain()
+    solo = f_solo.result()
+    assert solo.batch_size == 1
+    assert solo.gmem is not None and solo.buffer_offsets is not None
+    off, n = solo.buffer_offsets["scratch"]
+    np.testing.assert_array_equal(np.asarray(solo.gmem)[off:off + n],
+                                  scratch)
+    np.testing.assert_allclose(_fft_out(solo, 16), np.fft.fft(x), atol=1e-4)
+    # the normals before the solo merged; the one after ran separately
+    assert f_a.result().batch_size == 2 and f_b.result().batch_size == 2
+    assert f_d.result().batch_size == 1
+    assert f_a.result().gmem is None
+
+
+def test_threaded_server_round_trip():
+    """The background batcher serves submissions from the client thread."""
+    server = LaunchServer(_small_dcfg(), max_batch=4)
+    server.start()
+    try:
+        rng = np.random.default_rng(12)
+        xs, futs = [], []
+        for _ in range(4):
+            x, req = _fft16_req(rng)
+            xs.append(x)
+            futs.append(server.submit(req))
+        results = [f.result(timeout=120) for f in futs]
+    finally:
+        server.stop()
+    for x, r in zip(xs, results):
+        np.testing.assert_allclose(_fft_out(r, 16), np.fft.fft(x),
+                                   atol=1e-4)
+    assert server.stats()["completed"] == 4 and server.queue_depth == 0
+
+
+# ---------------------------------------------------------------------------
+# host dispatch-latency cycle model + static-priority visibility
+# ---------------------------------------------------------------------------
+
+def _one_fft16_launch(dcfg, *, queue_depth=0, schedule=None, priority=0):
+    rng = np.random.default_rng(13)
+    x = (rng.standard_normal(16)
+         + 1j * rng.standard_normal(16)).astype(np.complex64)
+    kern = fft_kernel(16)
+    if priority:
+        kern = dataclasses.replace(kern, priority=priority)
+    return launch(dcfg, programs=[kern], grid_map=[0, 0],
+                  shmem=[np.stack([fft_shmem(x, 64)] * 2)],
+                  queue_depth=queue_depth, schedule=schedule)
+
+
+def test_host_dispatch_latency_in_cycle_model():
+    """dispatch_latency + queue_latency * depth is charged before the
+    first block issues and surfaced in profile(); zero latencies stay
+    bit-identical to the pre-serving device (no profile key)."""
+    base = _one_fft16_launch(_small_dcfg())
+    assert "host_dispatch" not in base.profile()
+
+    dcfg = _small_dcfg(dispatch_latency=100, queue_latency=10)
+    res = _one_fft16_launch(dcfg, queue_depth=3)
+    hd = res.profile()["host_dispatch"]
+    assert hd == {"queue_depth": 3, "dispatch_cycles": 100,
+                  "queue_cycles": 30, "latency_cycles": 130}
+    assert int(res.cycles) == int(base.cycles) + 130
+    np.testing.assert_array_equal(np.asarray(res.timing.block_start),
+                                  np.asarray(base.timing.block_start) + 130)
+    # the charge scales with the queue depth the dispatch saw
+    deeper = _one_fft16_launch(dcfg, queue_depth=10)
+    assert int(deeper.cycles) == int(base.cycles) + 200
+    # identical machine state either way: latency is schedule-only
+    np.testing.assert_array_equal(np.asarray(res.shmem),
+                                  np.asarray(base.shmem))
+
+
+def test_static_schedule_surfaces_priority_loss():
+    """PR 7 satellite: schedule='static' ignoring Kernel(priority=) is no
+    longer silent — one UserWarning per process plus a per-launch
+    profile()['priority_respected'] flag."""
+    from repro.core import device as device_mod
+
+    device_mod._STATIC_PRIORITY_WARNED = False
+    with pytest.warns(UserWarning, match="priority"):
+        res = _one_fft16_launch(_small_dcfg(), schedule="static",
+                                priority=3)
+    assert res.profile()["priority_respected"] is False
+    # warn-once: the second prioritized static launch stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        res2 = _one_fft16_launch(_small_dcfg(), schedule="static",
+                                 priority=3)
+    assert res2.profile()["priority_respected"] is False
+    # dynamic dispatch honors the field; unprioritized static is fine too
+    assert _one_fft16_launch(
+        _small_dcfg(), schedule="dynamic",
+        priority=3).profile()["priority_respected"] is True
+    assert _one_fft16_launch(
+        _small_dcfg(), schedule="static").profile()["priority_respected"] \
+        is True

@@ -263,7 +263,10 @@ def test_engine_flexible_batching():
     outs = eng.run_until_done()
     assert sorted(outs) == list(range(6))            # queued ones admitted
     for rid, toks in outs.items():
-        assert len(toks) == 3 + rid + 1              # prefill token + new
+        # the budget covers ALL emitted tokens (prefill-sampled first
+        # token included) — exactly max_new_tokens, not one more
+        assert len(toks) == 3 + rid
+        assert eng.requests[rid].finish_reason == "budget"
         assert all(0 <= t < cfg.padded_vocab for t in toks)
     # the active width varied (the flexible-ISA analogue)
     assert len(set(eng.active_history)) > 1
