@@ -16,7 +16,13 @@ merged-wave path (``trace_engine.MergedTraceSchedule``) that removed the
 last workload class excluded from the fast path. The megakernel engine
 must beat the trace scan by >= 1.5x on the FFT64 and QRD16 batch lines
 (the plan-time constant folding + fused-segment dividend) and must not
-lose to it anywhere else.
+lose to it anywhere else. The ``"auto"`` ladder is timed as a fourth
+column and gated at ``auto_vs_best >= 0.95`` on EVERY line: auto must
+always land within jitter of the best fixed engine, so a ladder rung
+that routes a shape to the wrong engine (megakernel on short saxpy
+schedules was 0.81x vs step before
+``trace_engine.MEGAKERNEL_MIN_FUSED_ROWS``) fails CI instead of
+shipping as a silent default-path regression.
 
 The cold-start line times the host-side lowering (trace walk + schedule
 decode) against an empty vs a warmed persistent compile cache
@@ -123,18 +129,29 @@ def _packed_line():
 
 
 def _measure_line(fn, repeats: int) -> dict:
-    """Time one launch line on all three engines."""
+    """Time one launch line on all three engines plus the auto ladder.
+
+    ``auto_vs_best`` is the ladder's report card: best fixed engine /
+    auto. >= 1.0 means auto picked the winner; the smoke gate allows a
+    5% jitter band but no more — a ladder that routes a shape to the
+    wrong engine (the saxpy regression this gate was added for) shows
+    up as a 15-30% loss, far outside the band."""
     step_s = _time_launch(lambda: fn("step"), repeats)
     trace_s = _time_launch(lambda: fn("trace"), repeats)
     mega_s = _time_launch(lambda: fn("megakernel"), repeats)
+    auto_s = _time_launch(lambda: fn("auto"), repeats)
+    best_s = min(step_s, trace_s, mega_s)
     return {
         "step_us": round(step_s * 1e6, 1),
         "trace_us": round(trace_s * 1e6, 1),
         "mega_us": round(mega_s * 1e6, 1),
+        "auto_us": round(auto_s * 1e6, 1),
         "speedup": round(step_s / trace_s if trace_s > 0
                          else float("inf"), 3),
         "mega_vs_trace": round(trace_s / mega_s if mega_s > 0
                                else float("inf"), 3),
+        "auto_vs_best": round(best_s / auto_s if auto_s > 0
+                              else float("inf"), 3),
     }
 
 
@@ -212,7 +229,8 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         emit(f"engine_{name}", results[name]["mega_us"],
              f"trace={results[name]['trace_us']:.0f}us "
              f"step={results[name]['step_us']:.0f}us "
-             f"mega_vs_trace={results[name]['mega_vs_trace']:.2f}x")
+             f"mega_vs_trace={results[name]['mega_vs_trace']:.2f}x "
+             f"auto_vs_best={results[name]['auto_vs_best']:.2f}x")
     results["cold_start_lowering"] = _cold_start_line(repeats)
     emit("engine_cold_start_lowering",
          results["cold_start_lowering"]["warm_us"],
@@ -236,9 +254,15 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         # on the mixed FFT+QRD launch, and the megakernel's fused
         # segments + plan-time constant folding must beat the trace scan
         # by >= 1.5x on FFT64/QRD16 (and never lose to it on the mixed
-        # line). One re-measure before failing absorbs shared-runner
-        # scheduling jitter without weakening the bound.
+        # line); and the AUTO ladder must land within 5% of the best
+        # fixed engine on EVERY line — the gate that catches a ladder
+        # rung routing a shape to the wrong engine (the
+        # megakernel-on-saxpy regression, 0.81x vs step, fixed by
+        # trace_engine.MEGAKERNEL_MIN_FUSED_ROWS). One re-measure before
+        # failing absorbs shared-runner scheduling jitter without
+        # weakening the bound.
         lines = _lines(smoke)
+        auto_floor = 0.95
         floor = {n: (1.2 if n.startswith("mixed") else 1.0)
                  for n in results if n.startswith(("fft", "qrd", "mixed"))}
         mega_floor = {n: (1.0 if n.startswith("mixed") else 1.5)
@@ -248,18 +272,24 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
             "smoke set lost its heterogeneous mixed line"
         assert len(gated) >= 3, "smoke set lost its FFT/QRD lines"
         retried = False
-        for n in gated:
-            if results[n]["speedup"] < floor[n] \
-                    or results[n]["mega_vs_trace"] < mega_floor[n]:
+        for n in lines:
+            below = results[n]["auto_vs_best"] < auto_floor
+            if n in floor:
+                below = (below or results[n]["speedup"] < floor[n]
+                         or results[n]["mega_vs_trace"] < mega_floor[n])
+            if below:
                 redo = _measure_line(lines[n], repeats)
                 if (redo["speedup"] > results[n]["speedup"]
                         or redo["mega_vs_trace"]
-                        > results[n]["mega_vs_trace"]):
+                        > results[n]["mega_vs_trace"]
+                        or redo["auto_vs_best"]
+                        > results[n]["auto_vs_best"]):
                     results[n] = redo
                     emit(f"engine_{n}_retry", redo["mega_us"],
                          f"trace={redo['trace_us']:.0f}us "
                          f"speedup={redo['speedup']:.2f}x "
-                         f"mega_vs_trace={redo['mega_vs_trace']:.2f}x")
+                         f"mega_vs_trace={redo['mega_vs_trace']:.2f}x "
+                         f"auto_vs_best={redo['auto_vs_best']:.2f}x")
                 retried = True
         # the packing gate: length packing must not lose to grid order
         # on the interleaved mixed trace line (same one-retry absorb)
@@ -283,6 +313,10 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
             assert results[n]["mega_vs_trace"] >= mega_floor[n], (
                 f"megakernel below the {mega_floor[n]}x-vs-trace gate on "
                 f"{n}: {results[n]}")
+        for n in lines:
+            assert results[n]["auto_vs_best"] >= auto_floor, (
+                f"auto ladder below the {auto_floor}x-of-best-fixed-"
+                f"engine gate on {n}: {results[n]}")
         assert results[packed_key]["speedup"] >= 1.0, (
             f"length packing lost to grid-order waves on the interleaved "
             f"mixed trace line: {results[packed_key]}")

@@ -12,9 +12,9 @@ import sys
 
 
 def main() -> None:
-    from . import (engine_bench, kernel_bench, roofline_bench,
-                   serve_bench, table1_resources, table3_fft, table4_qrd,
-                   table5_resources)
+    from . import (engine_bench, fleet_bench, kernel_bench,
+                   roofline_bench, serve_bench, table1_resources,
+                   table3_fft, table4_qrd, table5_resources)
 
     print("name,us_per_call,derived")
     table1_resources.run()
@@ -24,14 +24,15 @@ def main() -> None:
     kernel_bench.run()
     engine_bench.run()
     serve_bench.run()
+    fleet_bench.run()
     roofline_bench.run()
 
 
 def smoke() -> None:
     # importing every module is the point: a bitrotted benchmark fails here
-    from . import (engine_bench, kernel_bench, roofline_bench,  # noqa: F401
-                   serve_bench, table1_resources, table3_fft, table4_qrd,
-                   table5_resources)
+    from . import (engine_bench, fleet_bench, kernel_bench,  # noqa: F401
+                   roofline_bench, serve_bench, table1_resources,
+                   table3_fft, table4_qrd, table5_resources)
     import numpy as np
 
     print("name,us_per_call,derived")
@@ -104,16 +105,22 @@ def smoke() -> None:
           f"{pads['length']}")
     # step/trace/megakernel engine wall clock; writes BENCH_engine.json
     # and gates CI on the trace engine not losing on the FFT/QRD lines,
-    # beating 1.2x on the merged heterogeneous mixed line, and the
+    # beating 1.2x on the merged heterogeneous mixed line, the
     # megakernel beating the trace scan >= 1.5x on FFT64/QRD16 (and
-    # never losing on the mixed line); also times the persistent
-    # compile cache's cold-vs-warm lowering
+    # never losing on the mixed line), and the auto ladder landing
+    # within 0.95x of the best fixed engine on EVERY line; also times
+    # the persistent compile cache's cold-vs-warm lowering
     engine_bench.run(smoke=True)
     # the serving front door under open-loop mixed FFT+QRD traffic;
     # writes BENCH_serve.json and gates CI on continuous batching
     # beating serial one-launch-at-a-time dispatch >= 1.2x in
     # requests/sec (plus the deterministic modeled-makespan bound)
     serve_bench.run(smoke=True)
+    # the device fleet: writes BENCH_fleet.json and gates CI on
+    # fleet(4) reaching >= 1.5x the single-device modeled throughput
+    # on the mixed FFT64+QRD16 grid, with every point asserted
+    # bit-identical to the single device before it counts
+    fleet_bench.run(smoke=True)
     print("smoke_ok,0.0,all benchmark entry points importable")
 
 

@@ -25,6 +25,10 @@ Public API:
     WavePacking, pack_waves              — schedule-aware wave packing
                                            (which blocks share a wave;
                                            launch(..., packing="length"))
+    FleetConfig, launch_fleet            — N simulated eGPUs behind one
+                                           launch front door (NUMA gmem
+                                           tier; shard_map over real JAX
+                                           devices when uniform)
     profile                              — Table III/IV-style cycle profile
     resources                            — Tables I/V + §III.E analytic model
 """
@@ -39,8 +43,9 @@ from .device import (
     launch,
     pack_buffers,
 )
+from .fleet import PLACEMENTS, ROUTES, FleetConfig, launch_fleet
 from .packing import PACKINGS, WavePacking, pack_waves
-from .scheduler import Schedule, schedule_blocks
+from .scheduler import Schedule, merge_schedules, schedule_blocks
 from .executor import (
     ExecBackend,
     execute_backends,
@@ -81,7 +86,8 @@ __all__ = [
     "ProgramTrace", "instr_cycles", "program_trace",
     "DeviceConfig", "DeviceState", "Kernel", "LaunchResult", "buffer_layout",
     "launch", "pack_buffers",
-    "Schedule", "schedule_blocks",
+    "Schedule", "merge_schedules", "schedule_blocks",
+    "PLACEMENTS", "ROUTES", "FleetConfig", "launch_fleet",
     "PACKINGS", "WavePacking", "pack_waves",
     "ENGINES", "MergedTraceSchedule", "TraceSchedule", "compile_merged",
     "compile_program",

@@ -480,6 +480,10 @@ class LaunchResult:
     priority_respected: bool = True     # False iff Kernel(priority=) was
                                         # requested but the static wave
                                         # schedule ignored it
+    fleet: dict[str, Any] | None = None  # multi-device fleet view
+                                        # (core.fleet.launch_fleet):
+                                        # per-device occupancy, routing,
+                                        # placement, NUMA charges
 
     @property
     def n_blocks(self) -> int:
@@ -539,6 +543,8 @@ class LaunchResult:
             out["trace_merge"] = self.trace_merge
         if self.host_dispatch is not None:
             out["host_dispatch"] = dict(self.host_dispatch)
+        if self.fleet is not None:
+            out["fleet"] = dict(self.fleet)
         t = self.timing
         if t is None:
             return out
@@ -619,6 +625,93 @@ def _kernel_shmem(sh: Any, depth: int, count: int, k: int):
     return batch
 
 
+def _normalize_grid(dcfg: DeviceConfig, program, grid, block, dim_x,
+                    programs, grid_map, shmem
+                    ) -> tuple[list[Kernel], np.ndarray, list[Any]]:
+    """Normalize the two launch forms to ``(kernels, gmap, shmems)`` —
+    shared by ``launch`` and the fleet router (``core.fleet``), so both
+    front doors accept exactly the same grids."""
+    if programs is not None:
+        if program is not None or grid is not None or block is not None \
+                or dim_x is not None:
+            raise ValueError("pass either program/grid/block/dim_x or "
+                             "programs=/grid_map=, not both")
+        if grid_map is None:
+            raise ValueError("programs= requires grid_map=")
+        kernels = [as_kernel(p) for p in programs]
+        gmap = np.asarray(list(grid_map), np.int64)
+        if gmap.ndim != 1 or gmap.shape[0] < 1:
+            raise ValueError("grid_map must be a non-empty 1-D sequence")
+        if gmap.min() < 0 or gmap.max() >= len(kernels):
+            raise ValueError(f"grid_map references programs outside "
+                             f"[0, {len(kernels)})")
+        shmems = list(shmem) if shmem is not None else [None] * len(kernels)
+        if len(shmems) != len(kernels):
+            raise ValueError(f"shmem sequence of {len(shmems)} != "
+                             f"{len(kernels)} programs")
+    else:
+        if program is None or grid is None:
+            raise ValueError("launch needs program+grid or programs+grid_map")
+        grid = (int(grid),) if isinstance(grid, int) \
+            else tuple(map(int, grid))
+        if len(grid) != 1 or grid[0] < 1:
+            raise ValueError(f"grid={grid} must be a positive (n_blocks,)")
+        kernels = [Kernel(program=program, block=block, dim_x=dim_x)]
+        gmap = np.zeros((grid[0],), np.int64)
+        shmems = [shmem]
+    return kernels, gmap, shmems
+
+
+def _lower_kernels(dcfg: DeviceConfig, kernels: Sequence[Kernel]
+                   ) -> tuple[list[str], list[SMConfig],
+                              list[tuple[jax.Array, jax.Array]],
+                              list[ProgramTrace], list[np.ndarray]]:
+    """Per-program static resources: unique names, per-kernel SMConfigs
+    (with validated imem/shmem overrides), packed I-MEM images, exact
+    static traces, and the raw word arrays. Shared by ``launch`` and the
+    fleet router so every device in a fleet lowers identically."""
+    names: list[str] = []
+    cfgs: list[SMConfig] = []
+    imems: list[tuple[jax.Array, jax.Array]] = []
+    traces: list[ProgramTrace] = []
+    word_arrays: list[np.ndarray] = []
+    for k, kern in enumerate(kernels):
+        blk = int(kern.block) if kern.block is not None \
+            else dcfg.sm.n_threads
+        overrides = {}
+        for field, ceiling in (("imem_depth", dcfg.sm.imem_depth),
+                               ("shmem_depth", dcfg.sm.shmem_depth)):
+            val = getattr(kern, field)
+            if val is None:
+                continue
+            val = int(val)
+            if val < 1:
+                raise ValueError(f"{field}={val} of program {k} must be "
+                                 f">= 1")
+            if val > ceiling:
+                raise ValueError(
+                    f"{field}={val} of program {k} exceeds the device "
+                    f"ceiling {ceiling} (DeviceConfig.sm.{field})")
+            overrides[field] = val
+        cfg = dataclasses.replace(
+            dcfg.sm, n_threads=blk,
+            dim_x=kern.dim_x if kern.dim_x is not None else blk,
+            **overrides)
+        words = kern.program.words if hasattr(kern.program, "words") \
+            else np.asarray(kern.program)
+        lo, hi = pack_imem(words, cfg.imem_depth)
+        cfgs.append(cfg)
+        word_arrays.append(np.asarray(words))
+        imems.append((jnp.asarray(lo), jnp.asarray(hi)))
+        traces.append(program_trace(words, blk, imem_depth=cfg.imem_depth,
+                                    max_steps=cfg.max_steps))
+        name = kern.name or f"k{k}"
+        while name in names:
+            name = f"{name}.{k}"
+        names.append(name)
+    return names, cfgs, imems, traces, word_arrays
+
+
 def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
                     traces: Sequence[ProgramTrace]
                     ) -> tuple[str, str | None]:
@@ -627,10 +720,13 @@ def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
     ``fallback`` is non-None exactly when ``"auto"`` degraded from its
     first-choice engine — ``"auto"`` never degrades silently; the reason
     is surfaced as ``LaunchResult.profile()["engine_fallback"]``. The
-    auto ladder is megakernel (fused segments, fastest) -> trace
-    (scanned schedule, when a program's schedule exceeds the megakernel
-    unroll cap) -> step (O(1) schedule memory, when a fuel-limited trace
-    means a runaway program).
+    auto ladder is megakernel (fused segments, fastest on schedules with
+    real fusible runs) -> trace (scanned schedule, when a program's
+    schedule exceeds the megakernel unroll cap) -> step (O(1) schedule
+    memory, when a fuel-limited trace means a runaway program; ALSO the
+    fallback when every program is too short for fusion to pay —
+    compiled-engine dispatch glue dominates tiny schedules, see
+    ``trace_engine.MEGAKERNEL_MIN_FUSED_ROWS``).
     """
     mode = engine if engine is not None else dcfg.engine
     if mode == "auto":
@@ -643,6 +739,17 @@ def _resolve_engine(engine: str | None, dcfg: DeviceConfig,
         if max(t.data_steps for t in traces) \
                 > trace_engine.MEGAKERNEL_UNROLL_CAP:
             return "trace", "megakernel-unroll-cap"
+        # plan-time cost cutoff: residual rows = data rows that are not
+        # global-port accesses, i.e. what the megakernel can actually
+        # fuse. When even the longest program is below the threshold
+        # there is nothing to amortize the compiled-engine overhead
+        # against and the step machine wins (BENCH_engine.json,
+        # saxpy256_b64: megakernel 0.811x vs step)
+        residual = max(t.data_steps
+                       - sum(1 for i in t.instrs if i.gmem)
+                       for t in traces)
+        if residual < trace_engine.MEGAKERNEL_MIN_FUSED_ROWS:
+            return "step", "megakernel-too-small"
         return "megakernel", None
     if mode not in trace_engine.ENGINES:
         raise ValueError(f"engine={mode!r} must be one of "
@@ -660,7 +767,8 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
            schedule: str | None = None,
            engine: str | None = None,
            packing: str | None = None,
-           queue_depth: int = 0) -> LaunchResult:
+           queue_depth: int = 0,
+           block_ids: Sequence[int] | None = None) -> LaunchResult:
     """CUDA-style kernel launch on the multi-SM device.
 
     Two forms:
@@ -744,6 +852,15 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     therefore only changes which blocks share a wave (and with it the
     modeled timing and merge padding), never observable state.
 
+    ``block_ids`` is the fleet router seam (``core.fleet``): a
+    ``(n_blocks,)`` override of each block's program-local ``BID``. A
+    fleet sub-launch runs only its device's slice of the grid, but every
+    block must still see its FLEET-level block id — saxpy's
+    ``gid = BID*block + TDX`` has to address the same global elements no
+    matter which device the block landed on. Default (None): block ``b``'s
+    BID is its index within its own program's grid, the single-device
+    behaviour, bit-identical to the pre-fleet device.
+
     ``queue_depth`` is the launch-queue depth at dispatch time — how many
     launches (including this one) the host had queued when it dispatched
     this one. The launch is charged ``dcfg.dispatch_latency +
@@ -756,35 +873,18 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
     is absent — bit-identical to the pre-serving device.
     """
     # ---- normalize to kernels + grid_map --------------------------------
-    if programs is not None:
-        if program is not None or grid is not None or block is not None \
-                or dim_x is not None:
-            raise ValueError("pass either program/grid/block/dim_x or "
-                             "programs=/grid_map=, not both")
-        if grid_map is None:
-            raise ValueError("programs= requires grid_map=")
-        kernels = [as_kernel(p) for p in programs]
-        gmap = np.asarray(list(grid_map), np.int64)
-        if gmap.ndim != 1 or gmap.shape[0] < 1:
-            raise ValueError("grid_map must be a non-empty 1-D sequence")
-        if gmap.min() < 0 or gmap.max() >= len(kernels):
-            raise ValueError(f"grid_map references programs outside "
-                             f"[0, {len(kernels)})")
-        shmems = list(shmem) if shmem is not None else [None] * len(kernels)
-        if len(shmems) != len(kernels):
-            raise ValueError(f"shmem sequence of {len(shmems)} != "
-                             f"{len(kernels)} programs")
-    else:
-        if program is None or grid is None:
-            raise ValueError("launch needs program+grid or programs+grid_map")
-        grid = (int(grid),) if isinstance(grid, int) \
-            else tuple(map(int, grid))
-        if len(grid) != 1 or grid[0] < 1:
-            raise ValueError(f"grid={grid} must be a positive (n_blocks,)")
-        kernels = [Kernel(program=program, block=block, dim_x=dim_x)]
-        gmap = np.zeros((grid[0],), np.int64)
-        shmems = [shmem]
+    kernels, gmap, shmems = _normalize_grid(dcfg, program, grid, block,
+                                            dim_x, programs, grid_map,
+                                            shmem)
     n_blocks = int(gmap.shape[0])
+    bids = None
+    if block_ids is not None:
+        bids = np.asarray(list(block_ids), np.int64)
+        if bids.shape != (n_blocks,):
+            raise ValueError(f"block_ids has shape {bids.shape}, want "
+                             f"({n_blocks},)")
+        if (bids < 0).any():
+            raise ValueError("block_ids must be non-negative")
     backend = backend or dcfg.backend
     mode = _resolve_schedule(schedule, dcfg, len(kernels))
 
@@ -808,45 +908,7 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
         _warn_static_priority()
 
     # ---- per-program static resources -----------------------------------
-    names: list[str] = []
-    cfgs: list[SMConfig] = []
-    imems: list[tuple[jax.Array, jax.Array]] = []
-    traces: list[ProgramTrace] = []
-    word_arrays: list[np.ndarray] = []
-    for k, kern in enumerate(kernels):
-        blk = int(kern.block) if kern.block is not None \
-            else dcfg.sm.n_threads
-        overrides = {}
-        for field, ceiling in (("imem_depth", dcfg.sm.imem_depth),
-                               ("shmem_depth", dcfg.sm.shmem_depth)):
-            val = getattr(kern, field)
-            if val is None:
-                continue
-            val = int(val)
-            if val < 1:
-                raise ValueError(f"{field}={val} of program {k} must be "
-                                 f">= 1")
-            if val > ceiling:
-                raise ValueError(
-                    f"{field}={val} of program {k} exceeds the device "
-                    f"ceiling {ceiling} (DeviceConfig.sm.{field})")
-            overrides[field] = val
-        cfg = dataclasses.replace(
-            dcfg.sm, n_threads=blk,
-            dim_x=kern.dim_x if kern.dim_x is not None else blk,
-            **overrides)
-        words = kern.program.words if hasattr(kern.program, "words") \
-            else np.asarray(kern.program)
-        lo, hi = pack_imem(words, cfg.imem_depth)
-        cfgs.append(cfg)
-        word_arrays.append(np.asarray(words))
-        imems.append((jnp.asarray(lo), jnp.asarray(hi)))
-        traces.append(program_trace(words, blk, imem_depth=cfg.imem_depth,
-                                    max_steps=cfg.max_steps))
-        name = kern.name or f"k{k}"
-        while name in names:
-            name = f"{name}.{k}"
-        names.append(name)
+    names, cfgs, imems, traces, word_arrays = _lower_kernels(dcfg, kernels)
     eng, eng_fallback = _resolve_engine(engine, dcfg, traces)
     present = [k for k in range(len(kernels)) if (gmap == k).any()]
     # heterogeneous grids take the MERGED path on both compiled engines:
@@ -983,8 +1045,9 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
             sh0 = jnp.concatenate(segs, axis=0)
             run_merged = trace_engine.run_wave_merged_megakernel \
                 if eng == "megakernel" else trace_engine.run_wave_merged
+            engine_bid = bids if bids is not None else local_bid
             regs_f, sh_f, gm, oob_f = run_merged(
-                backend, msched, counts, local_bid[blocks], pids,
+                backend, msched, counts, engine_bid[blocks], pids,
                 jnp.zeros((n, MAX_THREADS, N_REGS), _U32), sh0, gm,
                 jnp.zeros((n,), jnp.bool_))
             for i, b in enumerate(blocks):
@@ -1028,7 +1091,8 @@ def launch(dcfg: DeviceConfig, program=None, grid=None,
                     cfg, n, gmem_depth=dcfg.global_mem_depth,
                     shmem=None if sh_batch is None else sh_batch[w0:w1],
                     gmem=gm)
-                bidx = jnp.arange(w0, w1, dtype=_I32)  # program-local BID
+                bidx = jnp.arange(w0, w1, dtype=_I32) if bids is None \
+                    else jnp.asarray(bids[pos[w0:w1]], _I32)  # local BID
                 pidx = jnp.full((n,), k, dtype=_I32)
                 if eng == "trace":
                     fin = trace_engine.run_wave_trace(

@@ -85,6 +85,19 @@ ENGINES = ("step", "trace", "megakernel")
 # cap — the caller owns the compile-time trade.
 MEGAKERNEL_UNROLL_CAP = 4096
 
+# ...and only when there is enough fusible work to amortize the plan:
+# the megakernel's win is keeping registers/shmem resident across fused
+# gmem-free runs, but a short program (BENCH_engine.json's saxpy256_b64:
+# 7 residual data rows after partial evaluation) spends its time in
+# dispatch glue, measuring 0.81x vs the step machine. Below this many
+# residual (non-gmem) data rows in the LONGEST program of the launch,
+# "auto" falls back to "step" (engine_fallback = "megakernel-too-small").
+# Step, not trace: the same artifact shows trace also losing to step on
+# that shape (0.874x mega-vs-trace with mega at 0.811x of step), and the
+# ISSUE's acceptance gate holds auto to >= 0.95x of the BEST fixed
+# engine. An explicit engine= choice ignores the threshold.
+MEGAKERNEL_MIN_FUSED_ROWS = 16
+
 # decoded-field columns of the structure-of-arrays schedule, in the order
 # they are packed into the (n_steps, len(_FIELDS)) i32 matrix
 _FIELDS = ("sel", "opcode", "typ", "rd", "ra", "rb", "imm", "x",

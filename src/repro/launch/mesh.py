@@ -31,6 +31,22 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_devices: int):
+    """1-D mesh for the simulated-eGPU fleet (``core.fleet``): axis
+    ``"fleet"`` carries one simulated device per real JAX device. Run
+    CPU-only hosts with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to expose N devices."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices={n_devices} must be >= 1")
+    if n_devices > len(jax.devices()):
+        raise ValueError(
+            f"fleet mesh wants {n_devices} devices but jax exposes "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_devices} "
+            f"(CPU) or use placement='host'")
+    return jax.make_mesh((n_devices,), ("fleet",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The axes a batch dimension shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -145,6 +145,29 @@ def param_spec(mesh: Mesh, path: str, shape, cfg=None,
     return P()
 
 
+def fleet_spec(ndim: int = 1) -> P:
+    """PartitionSpec for fleet-stacked device state (``core.fleet``):
+    the leading axis is one simulated eGPU per mesh device, everything
+    under it (blocks, threads, registers, memory words) stays local."""
+    if ndim < 1:
+        raise ValueError(f"ndim={ndim} must be >= 1")
+    return P(*(["fleet"] + [None] * (ndim - 1)))
+
+
+def fleet_shardings(mesh: Mesh, state_like) -> Any:
+    """NamedSharding tree putting every leaf's leading axis on "fleet".
+
+    ``state_like`` is any pytree of arrays (or ShapeDtypeStructs) whose
+    leaves all carry a leading ``(n_devices, ...)`` fleet axis — the
+    stacked per-device regs/shmem/gmem/oob images the fleet launcher
+    feeds ``shard_map``.
+    """
+    flat, treedef = _tree_paths(state_like)
+    out = [NamedSharding(mesh, fleet_spec(max(1, leaf.ndim)))
+           for _, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def _tree_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []

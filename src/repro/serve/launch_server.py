@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.device import DeviceConfig, Kernel, as_kernel, launch
+from ..core.machine import MAX_THREADS, N_REGS
 
 ADMISSIONS = ("block", "reject")
 
@@ -116,6 +117,7 @@ class ServeResult:
     batch_occupancy: float          # mean wave fill of the merged launch
     queue_depth: int                # launch-queue depth the dispatch saw
     profile: dict[str, Any]         # the merged launch's profile()
+    finish_reason: str = "ok"       # "ok" | "unadmitted" (server stopped)
 
     def shmem_f32(self) -> jax.Array:
         return jax.lax.bitcast_convert_type(self.shmem, jnp.float32)
@@ -190,9 +192,9 @@ class LaunchServer:
         self._thread: threading.Thread | None = None
         self._stopping = False
         self._stats = {
-            "submitted": 0, "completed": 0, "rejected": 0, "batches": 0,
-            "batched_requests": 0, "max_queue_depth": 0,
-            "occupancy_sum": 0.0,
+            "submitted": 0, "completed": 0, "rejected": 0,
+            "unadmitted": 0, "batches": 0, "batched_requests": 0,
+            "max_queue_depth": 0, "occupancy_sum": 0.0,
         }
 
     # ---- admission --------------------------------------------------------
@@ -204,8 +206,17 @@ class LaunchServer:
         dispatching a batch inline when no batcher thread is running
         (synchronous callers make their own progress), or by blocking on
         the batcher otherwise.
+
+        A stopped server (``stop()`` called after ``start()``, no
+        restart yet) never admits: the returned future is already
+        resolved to a terminal :class:`ServeResult` with
+        ``finish_reason="unadmitted"``. This covers the submitter that
+        was blocked in the full-queue wait while ``stop()`` ran — it
+        must not enqueue into a dead server and hang its client.
         """
         with self._lock:
+            if self._stopping:
+                return self._unadmitted_future_locked(req)
             while len(self._queue) >= self.max_queue:
                 if self.admission == "reject":
                     self._stats["rejected"] += 1
@@ -214,6 +225,11 @@ class LaunchServer:
                         f"retry later or use admission='block'")
                 if self._thread is not None:
                     self._not_full.wait()
+                    if self._stopping:
+                        # woken by stop(): the batcher is gone, nothing
+                        # will ever serve this request — terminal result,
+                        # never a hang
+                        return self._unadmitted_future_locked(req)
                 else:
                     self._dispatch_next_locked()
             kern = as_kernel(req.kernel)
@@ -227,6 +243,36 @@ class LaunchServer:
             self._stats["max_queue_depth"] = max(
                 self._stats["max_queue_depth"], len(self._queue))
             self._not_empty.notify()
+        return fut
+
+    def _unadmitted_result(self, rid: int, tag: Any, grid: int,
+                           arrival: int) -> ServeResult:
+        """Terminal result for a request the server will never run:
+        zeroed state, zero cycles, ``finish_reason="unadmitted"`` (the
+        same terminal vocabulary as ``serve.engine.FINISH_REASONS``)."""
+        depth = self.dcfg.sm.shmem_depth
+        return ServeResult(
+            rid=rid, tag=tag,
+            regs=np.zeros((grid, MAX_THREADS, N_REGS), np.uint32),
+            shmem=np.zeros((grid, depth), np.uint32),
+            oob=np.zeros((grid,), bool),
+            gmem=None, buffer_offsets=None,
+            arrival_cycle=int(arrival), dispatch_cycle=int(self.clock),
+            finish_cycle=int(self.clock), cycles=0,
+            wait_cycles=max(0, int(self.clock) - int(arrival)),
+            latency_cycles=max(0, int(self.clock) - int(arrival)),
+            batch_id=-1, batch_size=0, batch_occupancy=0.0,
+            queue_depth=len(self._queue), profile={},
+            finish_reason="unadmitted")
+
+    def _unadmitted_future_locked(self, req: LaunchRequest) -> Future:
+        arrival = int(req.arrival_cycle) if req.arrival_cycle is not None \
+            else int(self.clock)
+        fut: Future = Future()
+        fut.set_result(self._unadmitted_result(self._seq, req.tag,
+                                               int(req.grid), arrival))
+        self._seq += 1
+        self._stats["unadmitted"] += 1
         return fut
 
     @property
@@ -407,8 +453,14 @@ class LaunchServer:
             self._thread.start()
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the batcher thread (draining pending requests first by
-        default; ``drain=False`` fails them with ``QueueFull``)."""
+        """Stop the batcher thread. ``drain=True`` (default) dispatches
+        every pending request first; ``drain=False`` resolves pending
+        futures to terminal ``finish_reason="unadmitted"`` results. A
+        queued ``Future`` never hangs its client either way, and
+        ``_stopping`` stays set until the next ``start()`` so a
+        submitter racing this call (including one blocked in the
+        full-queue wait) gets an unadmitted result instead of enqueuing
+        into a dead server."""
         with self._lock:
             if self._thread is None:
                 return
@@ -422,9 +474,13 @@ class LaunchServer:
                     self._dispatch_next_locked()
             else:
                 for e in self._queue:
-                    e.future.set_exception(QueueFull("server stopped"))
+                    e.future.set_result(self._unadmitted_result(
+                        e.seq, e.req.tag, int(e.req.grid), e.arrival))
+                    self._stats["unadmitted"] += 1
                 self._queue.clear()
-                self._not_full.notify_all()
+            # wake any submitter still blocked in the full-queue wait;
+            # it re-checks _stopping and resolves its client terminally
+            self._not_full.notify_all()
 
     def _serve_loop(self) -> None:
         while True:

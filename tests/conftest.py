@@ -46,6 +46,13 @@ def pytest_configure(config):
         "serve: serving-layer suite — decode-engine budget/admission "
         "regressions and the LaunchServer continuous-batching front door "
         "(CI runs it standalone via `pytest -m serve`)")
+    config.addinivalue_line(
+        "markers",
+        "fleet: multi-device fleet conformance — fleet(n) bit-identity "
+        "to the single device, NUMA cycle charges, shard_map placement "
+        "(CI runs it standalone under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4 via "
+        "`pytest -m fleet`)")
 
 try:
     import hypothesis  # noqa: F401

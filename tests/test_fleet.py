@@ -1,0 +1,269 @@
+"""Fleet conformance suite: ``launch_fleet`` vs the single device.
+
+The fleet's first contract (``core/fleet.py``) is bit-identity: a fleet
+launch computes exactly what ``device.launch`` computes on the same
+grid, for every ``n_devices`` and both routers — the fleet only changes
+where blocks run and what the cycle model charges. This suite pins that
+contract over the golden-program shapes (gmem-heavy saxpy grid, the
+fused two-stage reduction with its barrier fence, the interleaved
+FFT64 + QRD16 mix with per-block shmem batches), plus the fleet-only
+semantics on top: the device-wide barrier fence, the NUMA remote-gmem
+charge, per-device accounting, and the shard_map placement ladder.
+
+Run standalone with ``pytest -m fleet``; CI additionally runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+shard_map placement cells execute on real (forced-host) JAX devices.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    DeviceConfig,
+    FleetConfig,
+    Kernel,
+    SMConfig,
+    assemble,
+    buffer_layout,
+    launch,
+    launch_fleet,
+)
+from repro.core.programs.fft import fft_kernel, fft_shmem
+from repro.core.programs.mixed import mixed_device
+from repro.core.programs.qrd import qrd_kernel, qrd_shmem
+from repro.core.programs.reduction import reduction_grid_asm
+from repro.core.programs.saxpy import saxpy_grid_program
+
+from engine_conformance import assert_arch_identical, assert_bit_identical
+
+pytestmark = pytest.mark.fleet
+
+_N_JAX = len(jax.devices())
+
+
+# ---------------------------------------------------------------- cases
+
+def _case_saxpy():
+    """Gmem-heavy grid: 4 blocks, every block GLD/GSTs its slice — the
+    shape the NUMA charge is pinned on."""
+    n, block = 256, 64
+    rng = np.random.default_rng(7)
+    buffers = {
+        "x": rng.standard_normal(n).astype(np.float32),
+        "y": rng.standard_normal(n).astype(np.float32),
+        "z": np.zeros(n, np.float32),
+        "alpha": np.asarray([1.5], np.float32),
+    }
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=3 * n + 16,
+                        sm=SMConfig(max_steps=10_000))
+    return dcfg, dict(program=saxpy_grid_program(n, block),
+                      grid=(n // block,), block=block, buffers=buffers)
+
+
+def _case_reduction_fused():
+    """Two programs + a barrier: stage 2 GLDs the partials stage 1 GSTs
+    — the fence must stay device-WIDE under the fleet."""
+    x = np.arange(256, dtype=np.float32)
+    block, n_blocks, n2 = 64, 4, 16
+    buffers = {"x": x, "partials": np.zeros(n2, np.float32),
+               "result": np.zeros(16, np.float32)}
+    layout = buffer_layout(buffers)
+    src, par, res_off = (layout[k][0] for k in ("x", "partials", "result"))
+    kernels = [Kernel(assemble(reduction_grid_asm(block, src, par, True)),
+                      block=block, name="reduce.stage1"),
+               Kernel(assemble(reduction_grid_asm(n2, par, res_off, False)),
+                      block=n2, name="reduce.stage2", barrier=True)]
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=512,
+                        sm=SMConfig(max_steps=50_000))
+    return dcfg, dict(programs=kernels, grid_map=[0] * n_blocks + [1],
+                      buffers=buffers)
+
+
+def _case_mixed_fft_qrd():
+    """Interleaved FFT64 + QRD16 (6 + 3 blocks) with per-block shmem
+    batches — the heterogeneous shape the ``kernel`` router exists for."""
+    dcfg = mixed_device(64, n_sms=2)
+    xs = (np.linspace(-1, 1, 6 * 64).reshape(6, 64)
+          + 0.5j * np.ones((6, 64))).astype(np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * b
+                   for b in range(3)])
+    sh_f = np.stack([fft_shmem(x, dcfg.sm.shmem_depth) for x in xs])
+    sh_q = np.stack([qrd_shmem(A, dcfg.sm.shmem_depth) for A in As])
+    gmap = [0, 1, 0, 1, 0, 1, 0, 0, 0]
+    return dcfg, dict(programs=[fft_kernel(64), qrd_kernel()],
+                      grid_map=gmap, shmem=[sh_f, sh_q])
+
+
+CASES = {
+    "saxpy256_g4": _case_saxpy,
+    "reduction256_fused": _case_reduction_fused,
+    "mixed_fft_qrd": _case_mixed_fft_qrd,
+}
+
+
+def _plain(name):
+    dcfg, kw = CASES[name]()
+    return launch(dcfg, **kw)
+
+
+def _fleet(name, n_devices, **fleet_kw):
+    dcfg, kw = CASES[name]()
+    fcfg = FleetConfig(n_devices=n_devices, device=dcfg, **fleet_kw)
+    return launch_fleet(fcfg, **kw)
+
+
+# --------------------------------------------------- fleet(1) delegation
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_fleet1_is_the_plain_launch(name):
+    # delegation, not re-implementation: identical down to every counter,
+    # plus the fleet view attached
+    res = _fleet(name, 1)
+    assert_bit_identical(res, _plain(name))
+    fleet = res.profile()["fleet"]
+    assert fleet["n_devices"] == 1
+    assert fleet["remote_gmem_cycles"] == 0
+    assert fleet["per_device"][0]["blocks"] == res.n_blocks
+    assert fleet["per_device"][0]["makespan"] == res.cycles
+
+
+# ------------------------------------------------ fleet(n) bit-identity
+
+@pytest.mark.parametrize("route", ["block", "kernel"])
+@pytest.mark.parametrize("n_devices", [2, 3, 4])
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_fleet_n_is_functionally_identical(name, n_devices, route):
+    # scaling out changes timing, never observable state
+    plain = _plain(name)
+    res = _fleet(name, n_devices, route=route)
+    assert_arch_identical(res, plain)
+    fleet = res.profile()["fleet"]
+    assert fleet["n_devices"] == n_devices
+    assert fleet["placement"] in ("host", "shard_map")
+    assert sum(d["blocks"] for d in fleet["per_device"]) == res.n_blocks
+    assert max(d["makespan"] for d in fleet["per_device"]) == res.cycles
+
+
+def test_kernel_route_keeps_programs_device_local():
+    res = _fleet("mixed_fft_qrd", 2, route="kernel")
+    per = res.profile()["fleet"]["per_device"]
+    # program k -> device k % 2: 6 FFT blocks home, 3 QRD blocks remote
+    assert [d["blocks"] for d in per] == [6, 3]
+    assert_arch_identical(res, _plain("mixed_fft_qrd"))
+
+
+# ------------------------------------------------------- barrier fence
+
+@pytest.mark.parametrize("n_devices", [2, 3])
+def test_barrier_fences_the_whole_fleet(n_devices):
+    # stage 2 (block 4) must not issue anywhere before EVERY stage-1
+    # block has retired on EVERY device
+    res = _fleet("reduction256_fused", n_devices)
+    t = res.timing
+    assert int(t.block_start[4]) >= int(t.block_finish[:4].max())
+    total = float(np.asarray(res.buffer("result"))[0])
+    assert total == float(np.arange(256, dtype=np.float32).sum())
+
+
+# ------------------------------------------------------------ NUMA tier
+
+def test_remote_gmem_latency_charges_off_home_blocks():
+    base = _fleet("saxpy256_g4", 2, remote_gmem_latency=0)
+    numa = _fleet("saxpy256_g4", 2, remote_gmem_latency=7)
+    # the charge is cycles, not semantics
+    assert_arch_identical(numa, base)
+    f0 = base.profile()["fleet"]
+    f7 = numa.profile()["fleet"]
+    assert f0["remote_gmem_cycles"] == 0
+    assert f7["remote_gmem_cycles"] > 0
+    assert f7["remote_gmem_cycles"] % 7 == 0
+    assert numa.cycles > base.cycles
+    # only the off-home device pays: its makespan moves, home's doesn't
+    assert f7["per_device"][0]["makespan"] == f0["per_device"][0]["makespan"]
+    assert f7["per_device"][1]["makespan"] > f0["per_device"][1]["makespan"]
+    # by_class grew by exactly the charge
+    assert int(np.asarray(numa.cycles_by_class).sum()) \
+        == int(np.asarray(base.cycles_by_class).sum()) \
+        + f7["remote_gmem_cycles"]
+
+
+def test_home_device_moves_the_charge():
+    a = _fleet("saxpy256_g4", 2, remote_gmem_latency=5, home_device=0)
+    b = _fleet("saxpy256_g4", 2, remote_gmem_latency=5, home_device=1)
+    assert_arch_identical(a, b)
+    fa, fb = a.profile()["fleet"], b.profile()["fleet"]
+    assert fa["remote_gmem_cycles"] == fb["remote_gmem_cycles"] > 0
+    assert [d["home"] for d in fa["per_device"]] == [True, False]
+    assert [d["home"] for d in fb["per_device"]] == [False, True]
+
+
+# ----------------------------------------------------- timing / scaling
+
+def test_fleet_makespan_improves_on_wide_grids():
+    # 4 gmem-heavy blocks on 2-SM devices: doubling devices must not
+    # slow the modeled launch down, and 4 devices must beat 1
+    c = {n: _fleet("saxpy256_g4", n).cycles for n in (1, 2, 4)}
+    assert c[2] <= c[1] and c[4] <= c[2]
+    assert c[4] < c[1]
+
+
+# ------------------------------------------------------------ placement
+
+def test_forced_shard_map_raises_on_mixed_grid():
+    with pytest.raises(ValueError, match="shard_map"):
+        _fleet("mixed_fft_qrd", 2, placement="shard_map")
+
+
+def test_auto_placement_records_why_not():
+    res = _fleet("mixed_fft_qrd", 2)          # mixed grid: host, always
+    fleet = res.profile()["fleet"]
+    assert fleet["placement"] == "host"
+    assert "mixed-program grid" in fleet["placement_reason"]
+    res = _fleet("saxpy256_g4", 3)            # 4 blocks % 3 devices != 0
+    fleet = res.profile()["fleet"]
+    assert fleet["placement"] == "host"
+    assert "not divisible" in fleet["placement_reason"]
+
+
+def test_forced_host_always_works():
+    res = _fleet("saxpy256_g4", 2, placement="host")
+    assert res.profile()["fleet"]["placement"] == "host"
+    assert res.profile()["fleet"]["placement_reason"] == "requested"
+    assert_arch_identical(res, _plain("saxpy256_g4"))
+
+
+@pytest.mark.skipif(_N_JAX < 2, reason=f"jax exposes {_N_JAX} device(s); "
+                    "run under XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4")
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_shard_map_placement_is_bit_identical(n_devices):
+    if _N_JAX < n_devices:
+        pytest.skip(f"jax exposes {_N_JAX} device(s) < {n_devices}")
+    res = _fleet("saxpy256_g4", n_devices, placement="shard_map")
+    fleet = res.profile()["fleet"]
+    assert fleet["placement"] == "shard_map"
+    assert_arch_identical(res, _plain("saxpy256_g4"))
+    # auto must pick the same path on this uniform grid
+    auto = _fleet("saxpy256_g4", n_devices)
+    assert auto.profile()["fleet"]["placement"] == "shard_map"
+    assert_arch_identical(auto, res)
+
+
+# -------------------------------------------------------------- config
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="n_devices"):
+        FleetConfig(n_devices=0)
+    with pytest.raises(ValueError, match="remote_gmem_latency"):
+        FleetConfig(remote_gmem_latency=-1)
+    with pytest.raises(ValueError, match="home_device"):
+        FleetConfig(n_devices=2, home_device=2)
+    with pytest.raises(ValueError, match="route"):
+        FleetConfig(route="hash")
+    with pytest.raises(ValueError, match="placement"):
+        FleetConfig(placement="tpu")
+    assert FleetConfig(n_devices=3).n_sms \
+        == 3 * FleetConfig().device.n_sms

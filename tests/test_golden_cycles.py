@@ -30,6 +30,10 @@ def _record(res):
            "gmem": int(res.cycles_by_class[-1])}
     if res.n_waves:
         out["wave_cycles"] = [int(c) for c in res.wave_cycles]
+    if getattr(res, "fleet", None) is not None:
+        # the NUMA charge is part of the cost model — pin it explicitly
+        # next to the totals it already flows into (cycles + gmem class)
+        out["remote_gmem"] = int(res.fleet["remote_gmem_cycles"])
     return out
 
 
@@ -132,6 +136,54 @@ for _n in (1, 2, 4):
             (lambda n=_n, e=_e: _mixed("static", engine=e, n_sms=n,
                                        interleave=False,
                                        packing="length"))
+
+
+def _fleet_mixed(n_devices, route="block"):
+    """2-device fleet on the golden mixed FFT+QRD workload: the fleet
+    makespan (per-device schedules merged under the device-wide fence)
+    is as much a cost-model output as any single-device number."""
+    from repro.core import FleetConfig, launch_fleet
+    from repro.core.programs.fft import fft_kernel, fft_shmem
+    from repro.core.programs.mixed import mixed_device
+    from repro.core.programs.qrd import qrd_kernel, qrd_shmem
+
+    dcfg = mixed_device(64, n_sms=2)
+    xs = np.ones((6, 64), np.complex64)
+    As = np.stack([np.eye(16, dtype=np.float32)] * 3)
+    sh_f = np.stack([fft_shmem(x, dcfg.sm.shmem_depth) for x in xs])
+    sh_q = np.stack([qrd_shmem(A, dcfg.sm.shmem_depth) for A in As])
+    fcfg = FleetConfig(n_devices=n_devices, device=dcfg, route=route)
+    return launch_fleet(fcfg, programs=[fft_kernel(64), qrd_kernel()],
+                        grid_map=[0, 1, 0, 1, 0, 1, 0, 0, 0],
+                        shmem=[sh_f, sh_q])
+
+
+def _fleet_saxpy(n_devices, lat):
+    """The NUMA golden: FFT/QRD touch gmem only through shmem images,
+    so the remote-gmem charge is pinned on the gmem-heavy saxpy grid —
+    blocks routed off the home device pay ``lat`` per GLD/GST row,
+    visible in ``cycles``, the gmem class, and ``remote_gmem``."""
+    from repro.core import FleetConfig, launch_fleet
+    from repro.core.programs.saxpy import saxpy_grid_program
+
+    n, block = 256, 64
+    buffers = {"x": np.arange(n, dtype=np.float32),
+               "y": np.ones(n, np.float32),
+               "z": np.zeros(n, np.float32),
+               "alpha": np.asarray([2.0], np.float32)}
+    dcfg = DeviceConfig(n_sms=2, global_mem_depth=1024,
+                        sm=SMConfig(max_steps=10_000))
+    fcfg = FleetConfig(n_devices=n_devices, device=dcfg,
+                       remote_gmem_latency=lat)
+    return launch_fleet(fcfg, saxpy_grid_program(n, block),
+                        grid=(n // block,), block=block, buffers=buffers)
+
+
+CASES["fleet_mixed_fft_qrd[2dev,2sm]"] = lambda: _fleet_mixed(2)
+CASES["fleet_mixed_fft_qrd[2dev,2sm,kernel-route]"] = \
+    lambda: _fleet_mixed(2, route="kernel")
+CASES["fleet_saxpy256_b64[2dev,numa0]"] = lambda: _fleet_saxpy(2, 0)
+CASES["fleet_saxpy256_b64[2dev,numa7]"] = lambda: _fleet_saxpy(2, 7)
 
 
 @pytest.mark.parametrize("engine", ["trace", "megakernel"])

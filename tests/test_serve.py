@@ -17,6 +17,8 @@ Covers both serving levels:
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 import warnings
 
 import jax
@@ -350,6 +352,87 @@ def test_threaded_server_round_trip():
         np.testing.assert_allclose(_fft_out(r, 16), np.fft.fft(x),
                                    atol=1e-4)
     assert server.stats()["completed"] == 4 and server.queue_depth == 0
+    assert all(r.finish_reason == "ok" for r in results)
+
+
+def test_stop_without_drain_resolves_queued_futures_terminally():
+    """PR 9 satellite: stop(drain=False) with requests still queued must
+    resolve every pending Future to a terminal state — the pre-fix
+    server raised QueueFull into them, and a submitter racing stop()
+    could enqueue into the dead server and hang its client forever."""
+    server = LaunchServer(_small_dcfg(), max_batch=4)
+    server.start()
+    rng = np.random.default_rng(21)
+    # pile on more than one batch so something is still queued when the
+    # batcher is told to stop
+    futs = [server.submit(_fft16_req(rng)[1]) for _ in range(6)]
+    server.stop(drain=False)
+    for f in futs:
+        r = f.result(timeout=60)            # terminal, never a hang
+        assert r.finish_reason in ("ok", "unadmitted")
+    st = server.stats()
+    assert st["completed"] + st["unadmitted"] == 6
+    assert server.queue_depth == 0
+    # a submit AFTER stop (no restart) is unadmitted, already resolved
+    late = server.submit(_fft16_req(rng)[1])
+    assert late.done()
+    assert late.result(timeout=1).finish_reason == "unadmitted"
+
+
+def test_stop_with_drain_serves_every_queued_request():
+    """stop() (drain=True) finishes the queue: every future resolves to
+    a real result, none unadmitted."""
+    server = LaunchServer(_small_dcfg(), max_batch=2)
+    server.start()
+    rng = np.random.default_rng(22)
+    xs, futs = [], []
+    for _ in range(5):
+        x, req = _fft16_req(rng)
+        xs.append(x)
+        futs.append(server.submit(req))
+    server.stop()
+    results = [f.result(timeout=60) for f in futs]
+    assert all(r.finish_reason == "ok" for r in results)
+    for x, r in zip(xs, results):
+        np.testing.assert_allclose(_fft_out(r, 16), np.fft.fft(x),
+                                   atol=1e-4)
+    assert server.stats()["completed"] == 5
+
+
+def test_submitter_blocked_on_full_queue_survives_stop():
+    """The hang scenario itself: a client thread blocked in submit()'s
+    full-queue wait while stop() runs must come back with a terminal
+    unadmitted result within a bounded join, not deadlock."""
+    server = LaunchServer(_small_dcfg(), max_queue=1, admission="block",
+                          max_batch=1)
+    rng = np.random.default_rng(23)
+    outcome: dict[str, object] = {}
+
+    def blocked_submit():
+        fut = server.submit(_fft16_req(rng)[1])
+        outcome["result"] = fut.result(timeout=60)
+
+    with server._lock:                  # hold the batcher off
+        server.start()
+        server.submit(_fft16_req(rng)[1])       # fills max_queue=1
+        t = threading.Thread(target=blocked_submit, daemon=True)
+        t.start()
+        # wait until the submitter is parked in the full-queue wait
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            server._lock.release()
+            time.sleep(0.01)
+            server._lock.acquire()
+            if len(server._queue) >= server.max_queue and t.is_alive():
+                break
+    server.stop(drain=False)
+    t.join(timeout=60)
+    assert not t.is_alive()             # the pre-fix code hangs here
+    # depending on whether the batcher won the race for the lock, the
+    # parked submitter is either served or turned away — but its future
+    # is ALWAYS terminal
+    res = outcome["result"]
+    assert res.finish_reason in ("ok", "unadmitted")
 
 
 # ---------------------------------------------------------------------------

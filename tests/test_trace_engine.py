@@ -182,10 +182,37 @@ def test_fuzz_trace_engine_matches_step_machine(words, seed, n_sms,
 # ---------------------------------------------------------------------------
 
 def test_auto_engine_picks_megakernel_for_halting_programs():
-    prog = assemble("TDX R1\nSTO R1, (R1)+0\nSTOP")
-    res = launch(_dcfg(), prog, grid=(2,), block=16)
+    # enough fusible (non-gmem) work to clear MEGAKERNEL_MIN_FUSED_ROWS
+    prog = assemble("INIT 12\ntop:\nTDX R1\nADD.INT32 R2, R1, R1\n"
+                    "LOOP top\nSTO R2, (R1)+0\nSTOP")
+    res = launch(_dcfg(max_steps=100), prog, grid=(2,), block=16)
     assert res.engine == "megakernel" and res.halted
     assert res.engine_fallback is None
+
+
+def test_auto_engine_never_picks_megakernel_for_short_programs():
+    # the BENCH_engine.json regression: on saxpy256_b64 the megakernel
+    # measured 0.811x vs step, because a 7-residual-row program is all
+    # dispatch glue. auto must fall back to step and say why; an
+    # explicit engine choice is still honored.
+    from repro.core import trace_engine
+    from repro.core.programs.saxpy import saxpy_kernel
+
+    kern = saxpy_kernel(256, block=64)
+    words = kern.program.words
+    dcfg = _dcfg(n_sms=2, gdepth=1024, max_steps=10_000)
+    res = launch(dcfg, words, grid=(4,), block=64,
+                 gmem=np.zeros(1024, np.float32))
+    assert res.engine == "step"
+    assert res.profile()["engine_fallback"] == "megakernel-too-small"
+    # an explicit engine choice is never second-guessed — and all three
+    # engines stay bit-identical on the shape
+    for eng in ("megakernel", "trace"):
+        forced = launch(_dcfg(n_sms=2, gdepth=1024, max_steps=10_000,
+                              engine=eng), words, grid=(4,), block=64,
+                        gmem=np.zeros(1024, np.float32))
+        assert forced.engine == eng and forced.engine_fallback is None
+        _assert_launches_identical(res, forced)
 
 
 def test_auto_engine_degrades_to_trace_past_unroll_cap():
