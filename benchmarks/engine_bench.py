@@ -10,8 +10,10 @@ suite's job (``tests/test_conformance.py``); this file measures the
 speedups and emits ``BENCH_engine.json`` for CI to archive.
 
 The smoke set doubles as the CI regression gate: the trace engine must
-not be slower than the step machine on the FFT and QRD batch lines, and
-must beat it by >= 1.2x on the heterogeneous FFT+QRD mixed launch — the
+not be slower than the step machine on the FFT, QRD and predicated-
+Cholesky batch lines (the last one pins that per-lane predication —
+``@P``-guarded stores, SETP/SELP — costs the decode-once path nothing),
+and must beat it by >= 1.2x on the heterogeneous FFT+QRD mixed launch — the
 merged-wave path (``trace_engine.MergedTraceSchedule``) that removed the
 last workload class excluded from the fast path. The megakernel engine
 must beat the trace scan by >= 1.5x on the FFT64 and QRD16 batch lines
@@ -64,6 +66,8 @@ def _time_launch(fn, repeats: int) -> float:
 def _lines(smoke: bool):
     from repro.core import DeviceConfig, SMConfig
     from repro.core.programs import launch_reduction
+    from repro.core.programs.cholesky import (cholesky_imem_depth,
+                                              run_cholesky_batch)
     from repro.core.programs.fft import run_fft_batch
     from repro.core.programs.qrd import run_qrd_batch
     from repro.core.programs.saxpy import launch_saxpy
@@ -72,6 +76,12 @@ def _lines(smoke: bool):
 
     n_fft = 6 if smoke else 8
     n_qrd = 4 if smoke else 5
+    n_chol = 3 if smoke else 5
+    rng_c = np.random.default_rng(0)
+    g_c = rng_c.standard_normal((16, 16)).astype(np.float32)
+    Cs = np.stack([(g_c @ g_c.T + (16.0 + i) * np.eye(16))
+                   .astype(np.float32) for i in range(n_chol)])
+    bs = np.stack([np.ones(16, np.float32)] * n_chol)
     n_sms = 2 if smoke else 4
     xs = np.ones((n_fft, 64), np.complex64)
     As = np.stack([np.eye(16, dtype=np.float32) + 0.1 * i
@@ -95,6 +105,14 @@ def _lines(smoke: bool):
         f"qrd16_batch{n_qrd}": lambda engine: run_qrd_batch(
             As, device=dev(engine, shmem_depth=1024, imem_depth=1024,
                            max_steps=200_000)),
+        # the predicated SIMT line: Cholesky + triangular solve, whose
+        # inner loop runs @P-guarded stores and SETP/SELP selects — the
+        # gate pins that predication costs the fast engines nothing
+        # (trace must still not lose to step)
+        f"cholesky16_pred_batch{n_chol}": lambda engine: run_cholesky_batch(
+            Cs, bs, device=dev(engine, shmem_depth=1024,
+                               imem_depth=cholesky_imem_depth(True),
+                               max_steps=200_000)),
         # the heterogeneous launch (the golden mixed workload's 2:1
         # FFT:QRD ratio): FFT and QRD blocks interleaved in one grid —
         # the trace engine batches them as merged waves
@@ -264,8 +282,12 @@ def run(smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         lines = _lines(smoke)
         auto_floor = 0.95
         floor = {n: (1.2 if n.startswith("mixed") else 1.0)
-                 for n in results if n.startswith(("fft", "qrd", "mixed"))}
-        mega_floor = {n: (1.0 if n.startswith("mixed") else 1.5)
+                 for n in results
+                 if n.startswith(("fft", "qrd", "mixed", "cholesky"))}
+        # the predicated cholesky line gates mega at "never lose": its
+        # serial pivot chains leave fewer foldable rows than FFT/QRD
+        mega_floor = {n: (1.0 if n.startswith(("mixed", "cholesky"))
+                          else 1.5)
                       for n in floor}
         gated = sorted(floor)
         assert any(n.startswith("mixed") for n in gated), \

@@ -42,6 +42,7 @@ import numpy as np
 
 from .isa import (
     RESULT_LATENCY,
+    Cond,
     Depth,
     Instr,
     Op,
@@ -64,11 +65,15 @@ _DEPTH_ALIASES = {
 }
 
 _THREE_OP = {Op.ADD, Op.SUB, Op.MUL, Op.AND, Op.OR, Op.XOR, Op.LSL, Op.LSR,
-             Op.DOT, Op.SUM}
+             Op.DOT, Op.SUM, Op.SELP}
 _TWO_OP = {Op.NOT, Op.INVSQR}
 _REG = re.compile(r"^R(\d+)(?:@(\d+))?$", re.IGNORECASE)
 _MEM = re.compile(r"^\(R(\d+)\)\+(-?\d+)$", re.IGNORECASE)
 _LABEL = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*):$")
+_PRED = re.compile(r"^@(!?)R(\d+)$", re.IGNORECASE)
+# ops the sequencer handles scalar-side: never predicable (the instruction
+# stream must stay static — divergence is per-lane masking only)
+_NO_PRED = {Op.JMP, Op.JSR, Op.RTS, Op.LOOP, Op.INIT, Op.STOP, Op.NOP}
 
 
 class AsmError(ValueError):
@@ -128,11 +133,37 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
         mod = rest.rstrip().rstrip("}")
         code = code.strip()
 
+    pred: tuple[int, int] | None = None    # (preg, pneg)
+    if code.startswith("@"):
+        ptok, *prest = code.split(None, 1)
+        m = _PRED.match(ptok)
+        if not m:
+            raise AsmError(f"expected @Rp or @!Rp predicate guard, got "
+                           f"{ptok!r}", lineno, line)
+        preg = int(m.group(2))
+        if not 0 <= preg < 16:
+            raise AsmError(f"predicate register R{preg} out of range",
+                           lineno, line)
+        if not prest:
+            raise AsmError("predicate guard with no instruction",
+                           lineno, line)
+        pred = (preg, 1 if m.group(1) else 0)
+        code = prest[0]
+
     head, *rest = code.split(None, 1)
     operands = [t.strip() for t in rest[0].split(",")] if rest else []
 
     mnemonic, _, typ_s = head.partition(".")
     mnemonic = mnemonic.upper()
+    cond: Cond | None = None
+    if mnemonic == "SETP":
+        # SETP.cond[.typ]: the condition rides imm[2:0]
+        cond_s, _, typ_s = typ_s.partition(".")
+        try:
+            cond = Cond[cond_s.upper()]
+        except KeyError:
+            raise AsmError(f"SETP needs a condition (SETP.LT.FP32 ...), got "
+                           f"{cond_s!r}", lineno, line) from None
     try:
         op = Op[mnemonic]
     except KeyError:
@@ -141,8 +172,23 @@ def assemble_line(line: str, labels: dict[str, int], lineno: int = 0) -> Instr |
     width, depth = _parse_modifiers(mod, lineno, line)
 
     kw: dict = dict(op=op, typ=typ, width=width, depth=depth)
+    if pred is not None:
+        if op in _NO_PRED:
+            raise AsmError(f"{op.name} cannot be predicated (scalar "
+                           f"sequencer op)", lineno, line)
+        kw.update(pen=1, preg=pred[0], pneg=pred[1])
 
-    if op in _THREE_OP:
+    if op == Op.SETP:
+        if len(operands) != 3:
+            raise AsmError("SETP.cond[.typ] Rd, Ra, Rb", lineno, line)
+        rd, _ = _parse_reg(operands[0], lineno, line)
+        ra, ea = _parse_reg(operands[1], lineno, line)
+        rb, eb = _parse_reg(operands[2], lineno, line)
+        if ea is not None or eb is not None:
+            raise AsmError("SETP cannot snoop (cond lives in imm[2:0])",
+                           lineno, line)
+        kw.update(rd=rd, ra=ra, rb=rb, imm=int(cond))
+    elif op in _THREE_OP:
         if len(operands) != 3:
             raise AsmError(f"{op.name} needs 3 operands", lineno, line)
         rd, _ = _parse_reg(operands[0], lineno, line)
@@ -246,9 +292,17 @@ def assemble(text: str) -> Program:
 
 def disassemble(word: int) -> str:
     ins = Instr.decode(int(word))
+    p = f"@{'!' if ins.pneg else ''}R{ins.preg} " if ins.pen else ""
+    return p + _disasm_body(ins)
+
+
+def _disasm_body(ins: Instr) -> str:
     op = ins.op
     t = f".{ins.typ.name}" if op in (Op.ADD, Op.SUB, Op.MUL, Op.DOT, Op.SUM,
-                                     Op.INVSQR, Op.LODI) else ""
+                                     Op.INVSQR, Op.LODI, Op.SETP) else ""
+    if op == Op.SETP:
+        return (f"SETP.{Cond(ins.imm).name}{t} "
+                f"R{ins.rd}, R{ins.ra}, R{ins.rb}")
     mods = []
     if ins.width != Width.FULL:
         mods.append(f"w{ {0: 16, 1: 8, 2: 4, 3: 1}[int(ins.width)] }".replace(" ", ""))
@@ -306,12 +360,14 @@ def check_hazards(program: Program, n_threads: int = 512) -> list[str]:
             now += 1
             continue
         reads = []
-        if ins.op in _THREE_OP:
+        if ins.op in _THREE_OP or ins.op == Op.SETP:
             reads = [ins.ra, ins.rb]
         elif ins.op in _TWO_OP or ins.op in (Op.LOD, Op.STO, Op.GLD, Op.GST):
             reads = [ins.ra]
             if ins.op in (Op.STO, Op.GST):
                 reads.append(ins.rd)  # stores read the stored register
+        if ins.pen:
+            reads.append(ins.preg)  # the guard reads its predicate register
         src = program.source[pc] if pc < len(program.source) else ""
         for (wpc, wrd, ready) in window:
             if wrd in reads and now < ready:

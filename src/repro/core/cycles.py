@@ -40,10 +40,23 @@ occupied only for its own ``active_threads`` access; queueing behind other
 SMs shows up as per-SM port-wait time in the scheduler simulation instead
 of an inflated instruction cost.
 
+Predication (SIMT divergence)
+-----------------------------
+Predicated instructions (``@Rp``/``@!Rp``, plus SETP/SELP themselves)
+change WHAT a lane writes, never WHEN the sequencer issues: a masked-off
+lane still occupies its issue/drain slot as a bubble — the SP pipelines
+and the shared/global port phase sequences are clocked by the sequencer
+regardless of the per-lane write enable (the FPGA datapath has no
+lane-skip). So ``instr_cycles`` is mask-independent, the instruction
+stream stays static, and every trace/schedule/packing/NUMA number below
+is exact for divergent programs too. SETP/SELP are wavefront-paced ALU
+ops (the default arm).
+
 Static program traces
 ---------------------
 The eGPU ISA has no data-dependent control flow — JMP/JSR/LOOP/INIT/RTS
-targets and trip counts are immediates, STOP is unconditional — so the
+targets and trip counts are immediates, STOP is unconditional (predication
+gates lane *writes*, not the sequencer: see above) — so the
 sequence of instructions a sequencer issues (and hence the block's cycle
 cost) is a *static* property of the program. ``program_trace`` walks a
 program with a host-side sequencer (the same pc/loop-stack/return-stack

@@ -71,17 +71,20 @@ _F32 = jnp.float32
 
 
 def pack_imem(words: np.ndarray, depth: int) -> tuple[np.ndarray, np.ndarray]:
-    """Split 40-bit I-words into (lo32, hi8) uint32 arrays of ``depth``."""
+    """Split I-words into (lo32, hi) uint32 arrays of ``depth``.
+
+    ``hi`` carries the architectural bits [39:32] plus the predication
+    extension byte [45:40] (pen/preg/pneg — zero on every legacy word)."""
     w = np.asarray(words, dtype=np.int64)
     if w.shape[0] > depth:
         raise ValueError(f"program of {w.shape[0]} words exceeds I-MEM depth {depth}")
     lo = (w & 0xFFFFFFFF).astype(np.uint32)
-    hi = ((w >> 32) & 0xFF).astype(np.uint32)
+    hi = ((w >> 32) & 0x3FFF).astype(np.uint32)
     pad = depth - w.shape[0]
     # pad with STOP so runaway PCs halt
     stop_word = isa.Instr(op=Op.STOP).encode()
     lo = np.concatenate([lo, np.full((pad,), stop_word & 0xFFFFFFFF, np.uint32)])
-    hi = np.concatenate([hi, np.full((pad,), (stop_word >> 32) & 0xFF, np.uint32)])
+    hi = np.concatenate([hi, np.full((pad,), (stop_word >> 32) & 0x3FFF, np.uint32)])
     return lo, hi
 
 
@@ -105,12 +108,16 @@ def _decode(lo: jax.Array, hi: jax.Array) -> dict[str, jax.Array]:
         width=((hi >> 6) & 0x3).astype(_I32),
         ext_a=((lo >> 10) & 0x1F).astype(_I32),
         ext_b=((lo >> 5) & 0x1F).astype(_I32),
+        # predication extension byte (word bits [45:40] = hi bits [13:8])
+        preg=((hi >> 8) & 0xF).astype(_I32),
+        pen=((hi >> 12) & 0x1).astype(_I32),
+        pneg=((hi >> 13) & 0x1).astype(_I32),
     )
 
 
 # opcode -> handler group
 (_G_NOP, _G_ALU, _G_LOD, _G_STO, _G_LODI, _G_TD, _G_RED, _G_SFU, _G_CTL,
- _G_GLD, _G_GST) = range(11)
+ _G_GLD, _G_GST, _G_SETP, _G_SELP) = range(13)
 _GROUP_OF_OP = np.zeros((64,), np.int32)
 for _op, _g in {
     Op.NOP: _G_NOP,
@@ -123,6 +130,7 @@ for _op, _g in {
     Op.JMP: _G_CTL, Op.JSR: _G_CTL, Op.RTS: _G_CTL, Op.LOOP: _G_CTL,
     Op.INIT: _G_CTL, Op.STOP: _G_CTL,
     Op.GLD: _G_GLD, Op.GST: _G_GST,
+    Op.SETP: _G_SETP, Op.SELP: _G_SELP,
 }.items():
     _GROUP_OF_OP[int(_op)] = _g
 
@@ -131,6 +139,39 @@ _CLASS_OF = np.zeros((64, 3), np.int32)
 for _op in Op:
     for _t in isa.Typ:
         _CLASS_OF[int(_op), int(_t)] = isa.instr_class(_op, _t)
+
+
+def _setp_compare(cond, typ, a_u, b_u) -> jax.Array:
+    """Per-lane SETP compare -> bool tile.
+
+    ``cond``/``typ`` may be traced i32 scalars (step/trace engines) or
+    Python ints (megakernel fused rows): every comparison is exact, so
+    the traced select chain and the host-constant branch compute
+    identical bits. NaN note: FP32 ordered compares are all-false on
+    NaN operands, so GT/GE are computed directly (never as ~LE/~LT)."""
+    a_i = jax.lax.bitcast_convert_type(a_u, _I32)
+    b_i = jax.lax.bitcast_convert_type(b_u, _I32)
+    a_f = jax.lax.bitcast_convert_type(a_u, _F32)
+    b_f = jax.lax.bitcast_convert_type(b_u, _F32)
+    is_fp = typ == int(isa.Typ.FP32)
+    is_int = typ == int(isa.Typ.INT32)
+
+    def pick(f):
+        return jnp.where(is_fp, f(a_f, b_f),
+                         jnp.where(is_int, f(a_i, b_i), f(a_u, b_u)))
+
+    eq = pick(lambda a, b: a == b)
+    lt = pick(lambda a, b: a < b)
+    le = pick(lambda a, b: a <= b)
+    gt = pick(lambda a, b: a > b)
+    ge = pick(lambda a, b: a >= b)
+    C = isa.Cond
+    return jnp.where(cond == int(C.EQ), eq,
+                     jnp.where(cond == int(C.NE), ~eq,
+                               jnp.where(cond == int(C.LT), lt,
+                                         jnp.where(cond == int(C.LE), le,
+                                                   jnp.where(cond == int(C.GT),
+                                                             gt, ge)))))
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +269,22 @@ def _apply_row_cols(cfg, backend: "ExecBackend", row: FusedRow, cols,
               & (tid_t // N_SP < row.act_waves)
               & (tid_t < cfg.n_threads))
 
+    # SIMT predication: PEN is a HOST constant here (legacy rows pay
+    # nothing), but the predicate VALUE is runtime — read from the guard
+    # register column, never captured as a constant array (Pallas-safe).
+    # ``eff`` replaces ``active`` in every write/port mask; ``psel`` is
+    # the raw predicate (SELP's selector). Same formulas as the
+    # ``make_data_handlers`` handlers, so bit-identity is preserved.
+    pen = int(d.get("pen", 0))
+    if pen:
+        psel = (cols[int(d["preg"])] & 1) != 0             # (n_sms, 512)
+        if int(d.get("pneg", 0)):
+            psel = ~psel
+        eff = active[None] & psel
+    else:
+        psel = None
+        eff = active
+
     def read(r, ext):
         # snoop (X=1) gathers regs[ext*16 + lane]; without it the
         # operand IS the register column — no gather at all
@@ -242,21 +299,21 @@ def _apply_row_cols(cfg, backend: "ExecBackend", row: FusedRow, cols,
     if sel == 1:                                           # ALU
         a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
         old = cols[rd]
-        mask = jnp.broadcast_to(active, old.shape)
+        mask = jnp.broadcast_to(eff, old.shape)
         cols[rd] = backend.alu(d["opcode"], d["typ"], a_u, b_u, mask, old)
     elif sel == 2:                                         # LOD
         depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
         addr = addr_of()
-        bad = active & ((addr < 0) | (addr >= depth))
+        bad = eff & ((addr < 0) | (addr >= depth))
         safe = jnp.clip(addr, 0, depth - 1)
-        mask = active & ~bad
+        mask = eff & ~bad
         cols[rd] = backend.lod(shmem, safe, mask, cols[rd])
         oob = oob | bad.any(axis=1)
     elif sel == 3:                                         # STO
         depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
         addr = addr_of()
-        bad = active & ((addr < 0) | (addr >= depth))
-        shmem = backend.sto(shmem, addr, cols[rd], active & ~bad)
+        bad = eff & ((addr < 0) | (addr >= depth))
+        shmem = backend.sto(shmem, addr, cols[rd], eff & ~bad)
         oob = oob | bad.any(axis=1)
     elif sel == 4:                                         # LODI
         if typ == int(Typ.FP32):
@@ -264,7 +321,7 @@ def _apply_row_cols(cfg, backend: "ExecBackend", row: FusedRow, cols,
         else:
             val = imm & 0xFFFFFFFF
         vals = jnp.full((n_sms, MAX_THREADS), val, _U32)
-        cols[rd] = jnp.where(active, vals, cols[rd])
+        cols[rd] = jnp.where(eff, vals, cols[rd])
     elif sel == 5:                                         # TDX/TDY/BID/PID
         if op == int(Op.TDX):
             vals = jnp.broadcast_to((tid_t % cfg.dim_x).astype(_U32)[None],
@@ -279,27 +336,45 @@ def _apply_row_cols(cfg, backend: "ExecBackend", row: FusedRow, cols,
         else:
             vals = jnp.broadcast_to(prog_idx.astype(_U32)[:, None],
                                     (n_sms, MAX_THREADS))
-        cols[rd] = jnp.where(active, vals, cols[rd])
+        cols[rd] = jnp.where(eff, vals, cols[rd])
     elif sel == 6:                                         # DOT/SUM
         a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
-        lane_active = active.reshape(MAX_WAVES, N_SP)
         a2 = jax.lax.bitcast_convert_type(a_u, _F32) \
             .reshape(n_sms, MAX_WAVES, N_SP)
         b2 = jax.lax.bitcast_convert_type(b_u, _F32) \
             .reshape(n_sms, MAX_WAVES, N_SP)
         prod = a2 * b2 if op == int(Op.DOT) else a2 + b2
-        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
-        wave_active = lane_active.any(axis=1)
         dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP    # lane 0 per wave
         cur = cols[rd][:, ::N_SP]
-        new = jnp.where(wave_active[None],
-                        jax.lax.bitcast_convert_type(red, _U32), cur)
+        if pen:
+            # predicated-off lanes contribute nothing; a wavefront with
+            # no enabled lane keeps its old lane-0 value
+            lane_eff = eff.reshape(n_sms, MAX_WAVES, N_SP)
+            red = jnp.sum(jnp.where(lane_eff, prod, 0.0), axis=2)
+            new = jnp.where(lane_eff.any(axis=2),
+                            jax.lax.bitcast_convert_type(red, _U32), cur)
+        else:
+            lane_active = active.reshape(MAX_WAVES, N_SP)
+            red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
+            new = jnp.where(lane_active.any(axis=1)[None],
+                            jax.lax.bitcast_convert_type(red, _U32), cur)
         cols[rd] = cols[rd].at[:, dest].set(new)
     elif sel == 7:                                         # SFU (INVSQR)
         src = int(d["ext_a"]) * N_SP if snoop else 0
         val = jax.lax.bitcast_convert_type(cols[ra][:, src], _F32)
-        cols[rd] = cols[rd].at[:, 0].set(
-            jax.lax.bitcast_convert_type(jax.lax.rsqrt(val), _U32))
+        new = jax.lax.bitcast_convert_type(jax.lax.rsqrt(val), _U32)
+        if pen:
+            # the SFU issues from thread 0: its predicate gates the write
+            new = jnp.where(psel[:, 0], new, cols[rd][:, 0])
+        cols[rd] = cols[rd].at[:, 0].set(new)
+    elif sel == 10:                                        # SETP
+        a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
+        res = _setp_compare(imm, typ, a_u, b_u)
+        cols[rd] = jnp.where(eff, res.astype(_U32), cols[rd])
+    elif sel == 11:                                        # SELP
+        a_u, b_u = read(ra, d["ext_a"]), read(rb, d["ext_b"])
+        vals = jnp.where(psel, a_u, b_u) if pen else a_u
+        cols[rd] = jnp.where(active, vals, cols[rd])
     else:
         raise AssertionError(
             f"fused row with non-SM-local handler sel={sel}")
@@ -385,7 +460,8 @@ class FusedSegment:
 # register indices each handler reads (operands + read-modify-write dest)
 _ROW_READS = {1: ("ra", "rb", "rd"), 2: ("ra", "rd"), 3: ("ra", "rd"),
               4: ("rd",), 5: ("rd",), 6: ("ra", "rb", "rd"),
-              7: ("ra", "rd")}
+              7: ("ra", "rd"), 10: ("ra", "rb", "rd"),
+              11: ("ra", "rb", "rd")}
 
 
 def _fold_row(cfg, row: FusedRow, const_cols, depth: int) -> np.ndarray:
@@ -449,31 +525,36 @@ def eval_segment_rows(cfg, rows, const_cols, depth: int):
         sel, d = row.sel, row.d
         rd, ra, rb = int(d["rd"]), int(d["ra"]), int(d["rb"])
         op = int(d["opcode"])
+        pen = int(d.get("pen", 0))
         known = [const_cols[r] is not None for r in range(len(const_cols))]
         w_all = known[rd] or np.array_equal(np.asarray(row.active),
                                             full_mask)
 
-        foldable = (
+        # a predicated row is MAY-WRITE: which lanes commit depends on a
+        # runtime register, so it never folds, never becomes a static
+        # gather/scatter, and its destination column goes runtime below
+        foldable = not pen and (
             (sel == 1 and known[ra] and known[rb] and w_all)
             or (sel == 4 and w_all)
             or (sel == 5 and op in (int(_Op.TDX), int(_Op.TDY))
                 and w_all)
             or (sel == 6 and known[ra] and known[rb] and known[rd])
-            or (sel == 7 and known[ra] and known[rd]))
+            or (sel == 7 and known[ra] and known[rd])
+            or (sel in (10, 11) and known[ra] and known[rb] and w_all))
         if foldable:
             const_cols[rd] = _fold_row(cfg, row, const_cols, depth)
             dirty.add(rd)
             n_folded += 1
             continue
 
-        if sel == 2 and known[ra]:                 # static-address LOD
+        if sel == 2 and known[ra] and not pen:     # static-address LOD
             safe, mask, bad_any = _fold_addr(row, const_cols[ra], depth)
             residual.append(("lod", row, (safe, mask, bad_any),
                              consts_for((rd,))))
             const_cols[rd] = None
             continue
 
-        if sel == 3 and known[ra]:                 # static-address STO
+        if sel == 3 and known[ra] and not pen:     # static-address STO
             safe, do, bad_any = _fold_addr(row, const_cols[ra], depth)
             # single-port arbitration on the host: ascending thread
             # order, last enabled writer per address wins (exactly
@@ -488,9 +569,11 @@ def eval_segment_rows(cfg, rows, const_cols, depth: int):
             continue
 
         # generic runtime row (known operands materialize as literals)
-        residual.append(("exec", row, None, consts_for(
-            tuple({"ra": ra, "rb": rb, "rd": rd}[f]
-                  for f in _ROW_READS[sel]))))
+        reads = tuple({"ra": ra, "rb": rb, "rd": rd}[f]
+                      for f in _ROW_READS[sel])
+        if pen:
+            reads = reads + (int(d["preg"]),)      # the guard is a read
+        residual.append(("exec", row, None, consts_for(reads)))
         if sel != 3:                               # STO writes no register
             const_cols[rd] = None
 
@@ -742,9 +825,10 @@ register_backend(ExecBackend(
 # NOP and control, whose sequencer effects the engines handle themselves).
 
 # handler-group -> data-switch branch (0 = identity)
-DATA_SEL_OF_GROUP = np.zeros((11,), np.int32)
+DATA_SEL_OF_GROUP = np.zeros((13,), np.int32)
 for _g, _sel in {_G_ALU: 1, _G_LOD: 2, _G_STO: 3, _G_LODI: 4, _G_TD: 5,
-                 _G_RED: 6, _G_SFU: 7, _G_GLD: 8, _G_GST: 9}.items():
+                 _G_RED: 6, _G_SFU: 7, _G_GLD: 8, _G_GST: 9,
+                 _G_SETP: 10, _G_SELP: 11}.items():
     DATA_SEL_OF_GROUP[_g] = _sel
 
 # opcode -> data-switch branch
@@ -755,7 +839,7 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
                        active: jax.Array, block_idx: jax.Array,
                        prog_idx: jax.Array, *,
                        shmem_depth: int | None = None):
-    """Build the 10-way data-path switch body for one decoded instruction.
+    """Build the 12-way data-path switch body for one decoded instruction.
 
     ``d`` holds the decoded fields as traced i32 scalars (the dict from
     ``_decode`` or one step of the trace engine's pre-decoded schedule);
@@ -785,6 +869,24 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
     op, typ = d["opcode"], d["typ"]
     is_fp = typ == int(isa.Typ.FP32)
 
+    # SIMT predication. ``pgate`` is the predicate gate alone — all-true
+    # on legacy PEN=0 words (the fields are traced scalars here, so the
+    # gate is computed either way; the megakernel's host-constant rows
+    # skip it entirely). ``eff`` replaces the flexible-ISA mask in every
+    # write/port mask below: predicated-off lanes write no register/
+    # shmem/gmem state and generate no port transaction (no trap, no
+    # store, no last-writer slot). Cycle accounting is untouched —
+    # masked lanes still occupy their issue/drain slots as bubbles, so
+    # the static traces (and with them scheduler/packing/fleet pricing)
+    # stay exact.
+    def pgate(regs):
+        p = (jnp.take(regs, d["preg"], axis=2) & 1) != 0   # (n_sms, 512)
+        p = jnp.where(d["pneg"] == 1, ~p, p)
+        return jnp.where(d["pen"] == 1, p, True)
+
+    def eff(regs):
+        return active[None] & pgate(regs)
+
     def col(regs, rd):
         return jnp.take(regs, rd, axis=2)     # (n_sms, 512)
 
@@ -810,18 +912,19 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
         regs, shmem, gmem, oob = s
         a_u, b_u = operands(regs)
         old = col(regs, d["rd"])
-        mask = jnp.broadcast_to(active, old.shape)
+        mask = eff(regs)
         res = backend.alu(op, typ, a_u, b_u, mask, old)
         return set_col(regs, d["rd"], res), shmem, gmem, oob
 
     def h_lod(s):
         regs, shmem, gmem, oob = s
         depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
+        m = eff(regs)
         addr = addr_of(regs)
-        bad = active & ((addr < 0) | (addr >= depth))
+        bad = m & ((addr < 0) | (addr >= depth))
         safe = jnp.clip(addr, 0, depth - 1)
         old = col(regs, d["rd"])
-        mask = active & ~bad
+        mask = m & ~bad
         vals = backend.lod(shmem, safe, mask, old)
         return (set_col(regs, d["rd"], vals), shmem, gmem,
                 oob | bad.any(axis=1))
@@ -829,10 +932,11 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
     def h_sto(s):
         regs, shmem, gmem, oob = s
         depth = shmem_depth if shmem_depth is not None else shmem.shape[1]
+        m = eff(regs)
         addr = addr_of(regs)
-        bad = active & ((addr < 0) | (addr >= depth))
+        bad = m & ((addr < 0) | (addr >= depth))
         vals = col(regs, d["rd"])
-        shmem = backend.sto(shmem, addr, vals, active & ~bad)
+        shmem = backend.sto(shmem, addr, vals, m & ~bad)
         return regs, shmem, gmem, oob | bad.any(axis=1)
 
     def h_lodi(s):
@@ -840,7 +944,8 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
         as_f = jax.lax.bitcast_convert_type(d["imm"].astype(_F32), _U32)
         val = jnp.where(is_fp, as_f, d["imm"].astype(_U32))
         vals = jnp.broadcast_to(val, (regs.shape[0], MAX_THREADS))
-        return (write_active(regs, d["rd"], vals, active), shmem, gmem, oob)
+        return (write_active(regs, d["rd"], vals, eff(regs)),
+                shmem, gmem, oob)
 
     def h_td(s):
         regs, shmem, gmem, oob = s
@@ -854,46 +959,51 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
         vals = jnp.where(op == int(Op.TDX), x,
                          jnp.where(op == int(Op.TDY), y,
                                    jnp.where(op == int(Op.BID), bid, pid)))
-        return (write_active(regs, d["rd"], vals, active), shmem, gmem, oob)
+        return (write_active(regs, d["rd"], vals, eff(regs)),
+                shmem, gmem, oob)
 
     def h_red(s):
         # DOT/SUM: reduce each active wavefront across its active lanes,
         # write the result to lane 0 of that wavefront (the first SP).
+        # Predicated-off lanes contribute nothing and a wavefront with no
+        # enabled lane keeps its old lane-0 value.
         regs, shmem, gmem, oob = s
         n_sms = regs.shape[0]
         a_u, b_u = operands(regs)
-        lane_active = active.reshape(MAX_WAVES, N_SP)
+        lane_eff = eff(regs).reshape(n_sms, MAX_WAVES, N_SP)
         a2 = jax.lax.bitcast_convert_type(a_u, _F32) \
             .reshape(n_sms, MAX_WAVES, N_SP)
         b2 = jax.lax.bitcast_convert_type(b_u, _F32) \
             .reshape(n_sms, MAX_WAVES, N_SP)
         prod = jnp.where(op == int(Op.DOT), a2 * b2, a2 + b2)
-        red = jnp.sum(jnp.where(lane_active[None], prod, 0.0), axis=2)
-        wave_active = lane_active.any(axis=1)               # (waves,)
+        red = jnp.sum(jnp.where(lane_eff, prod, 0.0), axis=2)
+        wave_active = lane_eff.any(axis=2)                  # (n_sms, waves)
         dest = jnp.arange(MAX_WAVES, dtype=_I32) * N_SP     # lane 0 per wave
         cur = regs[:, dest, d["rd"]]                        # (n_sms, waves)
-        new = jnp.where(wave_active[None],
+        new = jnp.where(wave_active,
                         jax.lax.bitcast_convert_type(red, _U32), cur)
         return regs.at[:, dest, d["rd"]].set(new), shmem, gmem, oob
 
     def h_sfu(s):
-        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source)
+        # single-lane SFU: 1/sqrt of wavefront-0 lane-0 (snoopable source);
+        # the issuing thread-0 predicate gates the write
         regs, shmem, gmem, oob = s
         src_tid = jnp.where(snoop, d["ext_a"] * N_SP, 0)
         val = jax.lax.bitcast_convert_type(
             regs[:, src_tid, d["ra"]], _F32)                # (n_sms,)
-        r = jax.lax.rsqrt(val)
-        return (regs.at[:, 0, d["rd"]].set(
-            jax.lax.bitcast_convert_type(r, _U32)), shmem, gmem, oob)
+        r = jax.lax.bitcast_convert_type(jax.lax.rsqrt(val), _U32)
+        new = jnp.where(pgate(regs)[:, 0], r, regs[:, 0, d["rd"]])
+        return regs.at[:, 0, d["rd"]].set(new), shmem, gmem, oob
 
     def h_gld(s):
         regs, shmem, gmem, oob = s
         gdepth = gmem.shape[0]
+        m = eff(regs)
         addr = addr_of(regs)
-        bad = active & ((addr < 0) | (addr >= gdepth))
+        bad = m & ((addr < 0) | (addr >= gdepth))
         safe = jnp.clip(addr, 0, gdepth - 1)
         old = col(regs, d["rd"])
-        mask = active & ~bad
+        mask = m & ~bad
         vals = backend.gld(gmem, safe, mask, old)
         return (set_col(regs, d["rd"], vals), shmem, gmem,
                 oob | bad.any(axis=1))
@@ -901,15 +1011,33 @@ def make_data_handlers(cfg, backend: ExecBackend, d: dict,
     def h_gst(s):
         regs, shmem, gmem, oob = s
         gdepth = gmem.shape[0]
+        m = eff(regs)
         addr = addr_of(regs)
-        bad = active & ((addr < 0) | (addr >= gdepth))
+        bad = m & ((addr < 0) | (addr >= gdepth))
         vals = col(regs, d["rd"])
         # the single device-wide port drains in (sm, thread) order
-        gmem = backend.gst(gmem, addr, vals, active & ~bad)
+        gmem = backend.gst(gmem, addr, vals, m & ~bad)
         return regs, shmem, gmem, oob | bad.any(axis=1)
 
+    def h_setp(s):
+        regs, shmem, gmem, oob = s
+        a_u, b_u = operands(regs)
+        res = _setp_compare(d["imm"], typ, a_u, b_u)
+        return (write_active(regs, d["rd"], res.astype(_U32), eff(regs)),
+                shmem, gmem, oob)
+
+    def h_selp(s):
+        # Rd = P ? Ra : Rb — the @-guard is the SELECTOR here, not a
+        # write gate: SELP writes on every active lane (PEN=0 selects Ra)
+        regs, shmem, gmem, oob = s
+        a_u, b_u = operands(regs)
+        vals = jnp.where(pgate(regs), a_u, b_u)
+        return (write_active(regs, d["rd"], vals,
+                             jnp.broadcast_to(active, vals.shape)),
+                shmem, gmem, oob)
+
     return [h_identity, h_alu, h_lod, h_sto, h_lodi, h_td, h_red, h_sfu,
-            h_gld, h_gst]
+            h_gld, h_gst, h_setp, h_selp]
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,25 @@ Bit layout (paper numbers bits [40:1]; we use 0-indexed positions [39:0]):
 
 The WIDTH/DEPTH pair is the paper's "Variable" field ([40:37]): the flexible
 ISA that resizes the thread block per instruction with no flush.
+
+Predication extension (SIMT divergence): the architectural 40-bit word is
+full, so the per-instruction predicate rides in an *extension byte* above
+bit 40 (the same move the device extension made in opcode space for
+GLD/GST/BID/PID):
+
+    [45]    PNEG     predicate negate: guard on !P instead of P
+    [44]    PEN      predicate enable (0 = legacy word, unconditional)
+    [43:40] PREG     predicate register (a general register; LSB is the
+                     predicate value, SETP writes exactly 0/1)
+
+A lane executes a predicated instruction only when its effective mask —
+flexible-ISA active shape AND (``regs[preg] & 1) ^ pneg`` — is set: masked
+lanes write no register/shmem/gmem state and masked gmem lanes generate no
+global-port traffic. Legacy encodings have zeros above bit 40, so PEN=0 and
+every pre-existing program is bit-for-bit unchanged. Control-flow ops
+(JMP/JSR/RTS/LOOP/INIT/STOP/NOP) cannot be predicated: the sequencer is
+scalar and the issued instruction stream must stay static (that staticness
+is what keeps every cycle count in this repo exact).
 """
 from __future__ import annotations
 
@@ -37,6 +56,11 @@ F_WIDTH = (38, 2)
 # snoop sub-fields inside IMM
 F_EXT_A = (10, 5)  # within the 40-bit word: bits [14:10]
 F_EXT_B = (5, 5)   # bits [9:5]
+
+# predication extension byte, above the architectural 40-bit word
+F_PREG = (40, 4)
+F_PEN = (44, 1)
+F_PNEG = (45, 1)
 
 
 class Op(enum.IntEnum):
@@ -82,6 +106,22 @@ class Op(enum.IntEnum):
     GST = 25   # GST Rd (Ra)+offset — global-memory store
     BID = 26   # BID Rd — thread-block index within the program's grid
     PID = 27   # PID Rd — program index within a multi-program launch
+    # Predication extension (SIMT divergence; no data-dependent *control*
+    # flow — divergence is per-lane masking, the instruction stream is
+    # still static)
+    SETP = 28  # SETP.cond.typ Rd, Ra, Rb — per-lane compare -> 0/1 in Rd
+    SELP = 29  # SELP Rd, Ra, Rb — Rd = pred ? Ra : Rb (pred from @Rp)
+
+
+class Cond(enum.IntEnum):
+    """SETP compare conditions (carried in imm[2:0] — SETP cannot snoop)."""
+
+    EQ = 0
+    NE = 1
+    LT = 2
+    LE = 3
+    GT = 4
+    GE = 5
 
 
 class Typ(enum.IntEnum):
@@ -159,9 +199,28 @@ class Instr:
     ext_b: int = 0        # snoop wavefront index for RB
     width: Width = Width.FULL
     depth: Depth = Depth.FULL
+    pen: int = 0          # predicate enable (0 = unconditional, legacy)
+    preg: int = 0         # predicate register (LSB = predicate value)
+    pneg: int = 0         # guard on !P instead of P
 
     def encode(self) -> int:
         word = 0
+        if self.pen:
+            if self.op in CONTROL_IMM_OPS or self.op in (
+                    Op.RTS, Op.STOP, Op.NOP):
+                raise ValueError(
+                    f"{self.op.name} cannot be predicated: the sequencer "
+                    f"is scalar and the instruction stream must stay static")
+            word = _put(word, F_PEN, 1, "pen")
+            word = _put(word, F_PREG, self.preg, "preg")
+            word = _put(word, F_PNEG, self.pneg, "pneg")
+        elif self.preg or self.pneg:
+            raise ValueError("preg/pneg set without pen=1")
+        if self.op == Op.SETP:
+            if self.x:
+                raise ValueError(
+                    "SETP cannot snoop: the condition lives in imm[2:0]")
+            Cond(self.imm)  # raises on an out-of-range condition
         word = _put(word, F_WIDTH, int(self.width), "width")
         word = _put(word, F_DEPTH, int(self.depth), "depth")
         word = _put(word, F_OPCODE, int(self.op), "opcode")
@@ -199,7 +258,11 @@ class Instr:
         # control-flow addresses are unsigned
         if op in CONTROL_IMM_OPS:
             imm = raw_imm
+        pen = get(word, F_PEN)
         return Instr(
+            pen=pen,
+            preg=get(word, F_PREG) if pen else 0,
+            pneg=get(word, F_PNEG) if pen else 0,
             op=op,
             typ=Typ(get(word, F_TYPE)),
             rd=get(word, F_RD),
@@ -228,6 +291,12 @@ def instr_class(op: Op, typ: Typ) -> int:
         return 3
     if op in (Op.TDX, Op.TDY, Op.BID, Op.PID):
         return 3
+    if op == Op.SETP:
+        # the compare rides the arithmetic pipes: FP compare on the
+        # FP add/sub unit, integer compare on the INT pipe
+        return 5 if typ == Typ.FP32 else 3
+    if op == Op.SELP:
+        return 3  # a mux: INT-pipe occupancy regardless of operand type
     if op == Op.LOD:
         return 4
     if op == Op.STO:

@@ -5,7 +5,15 @@ Each module also exposes a ``*_kernel`` helper packaging the program as a
 the canonical heterogeneous demo and ``reduction.launch_reduction``'s
 ``fused=True`` form shows dependent kernels (barrier) in one launch.
 """
+from .cholesky import (
+    cholesky_asm,
+    cholesky_kernel,
+    cholesky_shmem,
+    run_cholesky,
+    run_cholesky_batch,
+)
 from .fft import bitrev_indices, fft_asm, fft_kernel, fft_shmem, run_fft
+from .masked_reduction import launch_masked_reduction, masked_reduction_asm
 from .mixed import launch_fft_qrd, mixed_device
 from .qrd import qrd_asm, qrd_kernel, qrd_shmem, run_qrd
 from .reduction import launch_reduction, reduction_asm, run_reduction
@@ -13,7 +21,10 @@ from .saxpy import launch_saxpy, run_saxpy, saxpy_asm, saxpy_kernel
 
 __all__ = [
     "bitrev_indices", "fft_asm", "fft_kernel", "fft_shmem", "run_fft",
+    "cholesky_asm", "cholesky_kernel", "cholesky_shmem", "run_cholesky",
+    "run_cholesky_batch",
     "launch_fft_qrd", "mixed_device",
+    "launch_masked_reduction", "masked_reduction_asm",
     "qrd_asm", "qrd_kernel", "qrd_shmem", "run_qrd",
     "launch_reduction", "reduction_asm", "run_reduction",
     "launch_saxpy", "saxpy_asm", "saxpy_kernel", "run_saxpy",

@@ -101,7 +101,8 @@ MEGAKERNEL_MIN_FUSED_ROWS = 16
 # decoded-field columns of the structure-of-arrays schedule, in the order
 # they are packed into the (n_steps, len(_FIELDS)) i32 matrix
 _FIELDS = ("sel", "opcode", "typ", "rd", "ra", "rb", "imm", "x",
-           "ext_a", "ext_b", "act_waves", "act_wthreads")
+           "ext_a", "ext_b", "pen", "preg", "pneg",
+           "act_waves", "act_wthreads")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,7 +145,7 @@ def _decode_words(words: np.ndarray) -> dict[str, np.ndarray]:
     signed-immediate view of snoop extension bits)."""
     w = np.asarray(words, np.int64)
     lo = jnp.asarray(w & 0xFFFFFFFF, jnp.uint32)
-    hi = jnp.asarray((w >> 32) & 0xFF, jnp.uint32)
+    hi = jnp.asarray((w >> 32) & 0x3FFF, jnp.uint32)
     return {k: np.asarray(v) for k, v in _decode(lo, hi).items()}
 
 
@@ -154,7 +155,10 @@ def _compile_cached(words_key: tuple, cfg: SMConfig) -> TraceSchedule:
 
     ckey = compile_cache.key_for("lowering", words_key, cfg)
     payload = compile_cache.load(ckey)
-    if payload is not None:
+    # a payload written before a _FIELDS extension (e.g. the predicate
+    # columns) is stale — treat it as a miss and re-lower, or the scan
+    # body KeyErrors on the missing column
+    if payload is not None and set(_FIELDS) <= set(payload["cols"]):
         trace, cols = payload["trace"], payload["cols"]
     else:
         trace = program_trace(np.asarray(words_key, np.int64),
@@ -186,6 +190,7 @@ def _compile_cached(words_key: tuple, cfg: SMConfig) -> TraceSchedule:
             opcode=d["opcode"], typ=d["typ"],
             rd=d["rd"], ra=d["ra"], rb=d["rb"],
             imm=d["imm"], x=d["x"], ext_a=d["ext_a"], ext_b=d["ext_b"],
+            pen=d["pen"], preg=d["preg"], pneg=d["pneg"],
             act_waves=depth_table[d["depth"]],
             act_wthreads=width_table[d["width"]],
         )
@@ -477,7 +482,7 @@ def _fused_rows(sched: TraceSchedule) -> tuple:
     for i in range(sched.n_steps):
         d = {f: np.int32(cols[f][i]) for f in
              ("opcode", "typ", "rd", "ra", "rb", "imm", "x", "ext_a",
-              "ext_b")}
+              "ext_b", "pen", "preg", "pneg")}
         waves = int(cols["act_waves"][i])
         wthreads = int(cols["act_wthreads"][i])
         rows.append(FusedRow(

@@ -48,6 +48,12 @@ def pytest_configure(config):
         "(CI runs it standalone via `pytest -m serve`)")
     config.addinivalue_line(
         "markers",
+        "divergence: SIMT predication suite — SETP/SELP semantics, "
+        "masked-lane never-mutate properties, and predicated-program "
+        "fuzz differentially vs the step oracle "
+        "(CI runs it standalone via `pytest -m divergence`)")
+    config.addinivalue_line(
+        "markers",
         "fleet: multi-device fleet conformance — fleet(n) bit-identity "
         "to the single device, NUMA cycle charges, shard_map placement "
         "(CI runs it standalone under "

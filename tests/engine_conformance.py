@@ -139,6 +139,97 @@ def _mixed_overrides(engine, schedule, backend, n_sms,
                   schedule=schedule, packing=packing)
 
 
+# ---------------------------------------------------------------------------
+# predicated (SIMT divergence) cases
+# ---------------------------------------------------------------------------
+
+# alternating-mask predication over every masked structure: guarded ALU,
+# SELP, masked shared store, masked global store AND load. Two blocks per
+# program write PID/BID-disjoint global ranges with address-determined
+# values, so the grid is deterministic under any wave mix.
+_PRED_A = """
+    TDX R1
+    BID R9
+    LOD R7, #1
+    LOD R8, #16
+    MUL.INT32 R10, R9, R8
+    AND R4, R1, R7                 // tid parity
+    SETP.EQ.INT32 R5, R4, R7       // P = tid odd (alternating mask)
+    ADD.INT32 R10, R10, R1         // gid = 16*BID + tid
+    @R5 ADD.INT32 R6, R10, R8      // odd lanes only: R6 = gid + 16
+    @R5 SELP R12, R10, R1          // ALL lanes: P ? gid : tid
+    @R5 STO R6, (R1)+0             // masked shared store (odd lanes)
+    @R5 GST R10, (R10)+32          // odd gids: gmem[32+gid] = gid
+    @!R5 GST R10, (R10)+96         // even gids: gmem[96+gid] = gid
+    @R5 GLD R11, (R10)+32          // masked global load-back (odd lanes)
+    @R5 STO R11, (R1)+16
+    STOP
+"""
+
+_PRED_B = """
+    TDX R1
+    BID R9
+    LOD R8, #16
+    MUL.INT32 R10, R9, R8
+    ADD.INT32 R10, R10, R1         // gid
+    ADD.INT32 R2, R10, R8
+    STO R2, (R1)+0
+    GST R2, (R10)+160              // legacy lane: gmem[160+gid] = gid+16
+    STOP
+"""
+
+
+def _predicated_mix(engine, schedule, backend, n_sms,
+                    packing) -> LaunchResult:
+    a = assemble(auto_nop(_PRED_A, 16)).words
+    b = assemble(auto_nop(_PRED_B, 16)).words
+    kerns = [Kernel(a, block=16, name="pred"),
+             Kernel(b, block=16, name="legacy")]
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=256, engine=engine,
+                       backend=backend,
+                       sm=SMConfig(shmem_depth=64, max_steps=5_000))
+    return launch(dev, programs=kerns, grid_map=[0, 1, 0, 1],
+                  schedule=schedule, packing=packing)
+
+
+def _cholesky_batch(engine, schedule, backend, n_sms,
+                    packing) -> LaunchResult:
+    # one SPD matrix (every pivot taken) + one PSD matrix with an exactly
+    # singular row/column (pivot 5 skipped) — both predicate branches of
+    # the pivot guard live in the same wave
+    from repro.core.programs.cholesky import run_cholesky_batch
+
+    rng = np.random.default_rng(7)
+    g = rng.standard_normal((16, 16)).astype(np.float32)
+    spd = (g @ g.T + 16 * np.eye(16)).astype(np.float32)
+    psd = spd.copy()
+    psd[5, :] = 0.0
+    psd[:, 5] = 0.0
+    dev = DeviceConfig(n_sms=n_sms, engine=engine, backend=backend,
+                       packing=packing,
+                       sm=SMConfig(shmem_depth=1024, imem_depth=1024,
+                                   max_steps=200_000))
+    _, _, res = run_cholesky_batch(np.stack([spd, psd]), device=dev,
+                                   schedule=schedule, solve=False)
+    return res
+
+
+def _masked_reduction(engine, schedule, backend, n_sms,
+                      packing) -> LaunchResult:
+    # clipped/masked grid reduction: stage 1 runs SETP/SELP clipping and
+    # mask-guarded SUMs, stage 2 is the stock fold behind a barrier — a
+    # heterogeneous grid whose predicated stage must merge-schedule
+    from repro.core.programs.masked_reduction import launch_masked_reduction
+
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=512, engine=engine,
+                       backend=backend, packing=packing,
+                       sm=SMConfig(max_steps=50_000))
+    _, _, res = launch_masked_reduction(
+        np.linspace(-2.0, 2.0, 120, dtype=np.float32), 0.25,
+        clip=(-1.0, 1.0), device=dev, block=64, schedule=schedule)
+    return res
+
+
 _HET_PACKINGS = ("grid", "length")
 
 CASES: dict[str, ConformanceCase] = {
@@ -158,6 +249,13 @@ CASES: dict[str, ConformanceCase] = {
     "mixed_overrides": ConformanceCase(_mixed_overrides,
                                        heterogeneous=True,
                                        packings=_HET_PACKINGS),
+    "predicated_mix": ConformanceCase(_predicated_mix, heterogeneous=True,
+                                      packings=_HET_PACKINGS),
+    "cholesky16_batch2": ConformanceCase(_cholesky_batch, pallas_sms=(2,)),
+    "masked_reduction120": ConformanceCase(_masked_reduction,
+                                           heterogeneous=True,
+                                           pallas_sms=(2,),
+                                           packings=_HET_PACKINGS),
 }
 
 ENGINES = ("step", "trace", "megakernel")

@@ -79,6 +79,34 @@ def _qrd_batch(n_sms):
     return res
 
 
+def _cholesky_batch(n_sms):
+    from repro.core.programs.cholesky import cholesky_imem_depth, \
+        run_cholesky_batch
+
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal((16, 16)).astype(np.float32)
+    As = np.stack([(g @ g.T + (16.0 + i) * np.eye(16)).astype(np.float32)
+                   for i in range(5)])
+    bs = np.stack([np.ones(16, np.float32) * (i + 1) for i in range(5)])
+    dev = DeviceConfig(n_sms=n_sms,
+                       sm=SMConfig(shmem_depth=1024,
+                                   imem_depth=cholesky_imem_depth(True),
+                                   max_steps=200_000))
+    _, _, res = run_cholesky_batch(As, bs, device=dev)
+    return res
+
+
+def _masked_reduction(n_sms):
+    from repro.core.programs import launch_masked_reduction
+
+    x = np.linspace(-4.0, 4.0, 1024, dtype=np.float32)
+    dev = DeviceConfig(n_sms=n_sms, global_mem_depth=2048,
+                       sm=SMConfig(max_steps=50_000))
+    _, _, res = launch_masked_reduction(x, 0.5, clip=(-2.0, 2.0),
+                                        device=dev, block=256)
+    return res
+
+
 def _mixed(schedule, priorities=None, interleave=True, engine=None,
            n_sms=None, packing=None):
     from repro.core.programs import launch_fft_qrd
@@ -100,6 +128,12 @@ for _n in (1, 2, 4):
     CASES[f"reduction1024_fused[{_n}sm]"] = (lambda n=_n: _reduction_fused(n))
     CASES[f"fft64_batch5[{_n}sm]"] = (lambda n=_n: _fft_batch(n))
     CASES[f"qrd16_batch5[{_n}sm]"] = (lambda n=_n: _qrd_batch(n))
+    # predicated program library (PR 9): timing must stay a pure
+    # function of the schedule — masks never move a cycle
+    CASES[f"cholesky16_solve_batch5[{_n}sm]"] = \
+        (lambda n=_n: _cholesky_batch(n))
+    CASES[f"masked_reduction1024[{_n}sm]"] = \
+        (lambda n=_n: _masked_reduction(n))
 CASES["mixed_fft_qrd[4sm,dynamic]"] = lambda: _mixed("dynamic")
 CASES["mixed_fft_qrd[4sm,static]"] = lambda: _mixed("static")
 # priority discipline: all FFT blocks queue FIRST (interleave=False, the
